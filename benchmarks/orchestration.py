@@ -1,0 +1,118 @@
+"""Orchestration benchmarks — TonY has no tables, so these quantify the
+lifecycle claims of §2/§3: submission latency vs job size, RM allocation
+throughput, registration->spec barrier cost, and fault-recovery overhead."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    ContainerRequest,
+    Resource,
+    TonYClient,
+    YarnLikeBackend,
+    job_spec_from_props,
+    make_cluster,
+)
+
+
+def _noop_program(env, ctx):
+    ctx.rendezvous(timeout=30)
+    return 0
+
+
+def _job(workers: int, ps: int = 0):
+    props = {
+        "tony.application.name": f"bench-{workers}w",
+        "tony.worker.instances": str(workers),
+        "tony.worker.memory": "512",
+        "tony.worker.vcores": "1",
+    }
+    if ps:
+        props.update({"tony.ps.instances": str(ps), "tony.ps.memory": "256",
+                      "tony.ps.vcores": "1"})
+    return job_spec_from_props(props)
+
+
+def bench_job_lifecycle_latency() -> list[tuple[str, float, str]]:
+    """submit -> SUCCEEDED wall time for growing task counts."""
+    rows = []
+    for workers in (1, 4, 16, 64):
+        rm = make_cluster(num_gpu_nodes=8, num_cpu_nodes=8, gpus_per_node=8,
+                          memory_mb=1 << 20, vcores=256)
+        client = TonYClient(YarnLikeBackend(rm))
+        t0 = time.monotonic()
+        res = client.run_and_wait(_job(workers), _noop_program, timeout=120)
+        dt = time.monotonic() - t0
+        assert res.succeeded
+        rows.append((f"lifecycle_{workers}tasks", dt * 1e6,
+                     f"tasks={workers}"))
+    return rows
+
+
+def bench_allocation_throughput() -> list[tuple[str, float, str]]:
+    rm = make_cluster(num_gpu_nodes=16, num_cpu_nodes=0, gpus_per_node=64,
+                      memory_mb=1 << 22, vcores=4096)
+    app = rm.submit_application("bench", "default")
+    n = 2000
+    req = ContainerRequest(Resource(64, 1, 0))
+    t0 = time.monotonic()
+    cs = [rm.allocate(app, req) for _ in range(n)]
+    t_alloc = time.monotonic() - t0
+    t0 = time.monotonic()
+    for c in cs:
+        rm.release(c.container_id)
+    t_rel = time.monotonic() - t0
+    assert rm.invariants_ok()
+    return [("rm_allocate", t_alloc / n * 1e6, f"{n/t_alloc:.0f} alloc/s"),
+            ("rm_release", t_rel / n * 1e6, f"{n/t_rel:.0f} release/s")]
+
+
+def bench_cluster_spec_barrier() -> list[tuple[str, float, str]]:
+    """First registration -> cluster_spec_built, from the event log."""
+    rows = []
+    for workers in (4, 32):
+        rm = make_cluster(num_gpu_nodes=8, num_cpu_nodes=8,
+                          memory_mb=1 << 20, vcores=256)
+        client = TonYClient(YarnLikeBackend(rm))
+        res = client.run_and_wait(_job(workers), _noop_program, timeout=120)
+        assert res.succeeded
+        regs = rm.events.of_kind("task_registered")
+        built = rm.events.of_kind("cluster_spec_built")
+        dt = built[0].ts - regs[0].ts
+        rows.append((f"spec_barrier_{workers}tasks", dt * 1e6,
+                     f"registrations={len(regs)}"))
+    return rows
+
+
+def bench_fault_recovery_overhead() -> list[tuple[str, float, str]]:
+    """Wall-clock cost of teardown + renegotiation + relaunch (no-ML job)."""
+    att = {"n": 0}
+
+    def fail_once(env, ctx):
+        ctx.rendezvous(timeout=30)
+        if env["TASK_TYPE"] == "worker" and env["TASK_INDEX"] == "0":
+            att["n"] += 1
+            if att["n"] == 1:
+                return 1
+        return 0
+
+    rm = make_cluster()
+    client = TonYClient(YarnLikeBackend(rm))
+    t0 = time.monotonic()
+    res = client.run_and_wait(_job(4), fail_once, timeout=120)
+    total = time.monotonic() - t0
+    assert res.succeeded and len(res.attempts) == 2
+    a1 = res.attempts[0].duration_s
+    a2 = res.attempts[1].duration_s
+    overhead = total - a2
+    return [("fault_recovery_overhead", overhead * 1e6,
+             f"attempt1={a1*1e3:.1f}ms attempt2={a2*1e3:.1f}ms")]
+
+
+def all_benches() -> list[tuple[str, float, str]]:
+    rows = []
+    rows += bench_allocation_throughput()
+    rows += bench_job_lifecycle_latency()
+    rows += bench_cluster_spec_barrier()
+    rows += bench_fault_recovery_overhead()
+    return rows

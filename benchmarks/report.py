@@ -1,0 +1,122 @@
+"""Assemble EXPERIMENTS.md from the dry-run artifacts + the hand-written perf
+ledger (experiments/perf_ledger.md).
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.roofline import MESH_CHIPS, markdown_table, summarize
+
+HEADER = """# EXPERIMENTS — TonY reproduction
+
+All numbers derive from compiled artifacts of the multi-pod dry-run
+(`repro.launch.dryrun`): this container is CPU-only, so TPU v5e is the
+*target* (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI) and every term
+below is computed from `memory_analysis()` / `cost_analysis()` /
+collective-ops parsed out of the optimized HLO. Orchestration and
+training-correctness results run for real on CPU (see `benchmarks/run.py`
+and `tests/`).
+
+Methodology notes:
+- `cost_analysis()` on a GSPMD-partitioned module reports **per-chip**
+  FLOPs/bytes (verified against analytic per-layer FLOPs), so roofline terms
+  are per-chip; MODEL_FLOPS ratios multiply back by chip count.
+- XLA counts while-loop bodies **once**, so the scanned-layer production
+  program under-reports; the `analysis` dry-run mode therefore lowers
+  UNROLLED 1x- and 2x-pattern variants on the same mesh and extrapolates
+  exact per-layer marginals (whole-model exact when depth <= 12). RWKV's
+  time-scan body is corrected analytically (`rwkv_correction_flops`).
+- `bytes accessed` is XLA's post-fusion operand+output traffic — an upper
+  bound on HBM traffic (CPU fusion is weaker than TPU), used as a
+  *comparable* metric across variants, not an absolute prediction.
+"""
+
+
+def dryrun_section(compiles: list[dict]) -> str:
+    rows = ["## §Dry-run — compile proof, memory, collectives",
+            "",
+            "Every (architecture x input-shape) lowers AND compiles for the"
+            " production meshes: 16x16 = 256 chips (single pod) and"
+            " 2x16x16 = 512 chips (multi-pod, 'pod' axis over DCN).",
+            "",
+            "| arch | shape | mesh | status | args GB/chip | temp GB/chip |"
+            " collective ops | AG GB | AR GB | A2A GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    ok = fail = skip = 0
+    for rec in sorted(compiles, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if rec.get("skipped"):
+            skip += 1
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                        f"| SKIP ({rec['skipped'][:40]}…) | — | — | — | — | — | — |")
+            continue
+        if not rec.get("ok"):
+            fail += 1
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                        f"| **FAIL** {rec.get('error','')[:60]} | — | — | — | — | — | — |")
+            continue
+        ok += 1
+        f = rec["full"]
+        m = f["memory"] or {}
+        c = f["collectives"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok "
+            f"| {m.get('argument_bytes_per_device', 0)/1e9:.2f} "
+            f"| {m.get('temp_bytes_per_device', 0)/1e9:.2f} "
+            f"| {int(c['count'])} "
+            f"| {c['all-gather']/1e9:.2f} | {c['all-reduce']/1e9:.2f} "
+            f"| {c['all-to-all']/1e9:.2f} |")
+    rows.insert(1, f"\n**{ok} ok / {fail} failed / {skip} skipped**\n")
+    return "\n".join(rows)
+
+
+def roofline_section(terms: list[dict]) -> str:
+    out = ["## §Roofline — per-chip terms from the single-pod dry-run", "",
+           markdown_table([t for t in terms if t.get("mesh", "16x16") == "16x16"]),
+           "", "### Dominant-term counts"]
+    counts = defaultdict(int)
+    for t in terms:
+        counts[t.get("dominant", "skipped")] += 1
+    for k, v in sorted(counts.items()):
+        out.append(f"- {k}: {v}")
+    out += ["", "### What would move each dominant term down", ""]
+    byarch = {}
+    for t in terms:
+        if "dominant" in t:
+            byarch.setdefault((t["arch"], t["shape"]), t)
+    for (arch, shape), t in sorted(byarch.items()):
+        hint = {
+            "memory": "cut materialized O(T^2)/logits f32 buffers "
+                      "(fused softmax, flash kernel on real TPU, bf16 scores)",
+            "compute": "reduce remat recompute; larger per-chip tiles",
+            "collective": "change strategy (tp_only kills FSDP gathers; "
+                          "reduce-scatter grads), tune MoE group size",
+        }[t["dominant"]]
+        out.append(f"- {arch} x {shape}: {t['dominant']}-bound -> {hint}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    ap.add_argument("--perf-ledger", default="experiments/perf_ledger.md")
+    args = ap.parse_args()
+    terms, compiles = summarize(args.dir)
+    parts = [HEADER, dryrun_section(compiles), "", roofline_section(terms), ""]
+    if os.path.exists(args.perf_ledger):
+        parts.append(open(args.perf_ledger).read())
+    else:
+        parts.append("## §Perf\n\n(perf ledger pending)")
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {args.out}: {len(compiles)} compile records, "
+          f"{len(terms)} roofline rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Roofline derivation from dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun_all) and
+derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+cost_analysis() on a GSPMD-partitioned module reports PER-CHIP numbers (we
+verified: per-layer marginal flops match analytic_per_layer/n_chips), so the
+terms above are already per-chip; MODEL_FLOPS ratio uses flops * n_chips.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def load_results(directory: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def derive_terms(rec: dict) -> dict | None:
+    """Roofline terms from one analysis-mode record."""
+    ex = rec.get("extrapolated")
+    if not rec.get("ok") or ex is None:
+        return None
+    chips = MESH_CHIPS[rec["mesh"]]
+    flops = ex["flops"]
+    byts = ex["bytes_accessed"]
+    coll = ex["collective_bytes_total"]
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    model_fl = rec["model_flops"]
+    ratio = model_fl / (flops * chips) if flops else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "strategy": rec.get("strategy", "fsdp_tp"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_fl,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": ratio,
+        "roofline_bound_s": max(t_compute, t_memory, t_coll),
+        "collectives": ex["collectives"],
+    }
+
+
+def summarize(directory: str) -> tuple[list[dict], list[dict]]:
+    """Returns (analysis_terms, compile_records)."""
+    terms, compiles = [], []
+    for rec in load_results(directory):
+        if rec.get("mode") == "analysis":
+            t = derive_terms(rec)
+            if t:
+                terms.append(t)
+            elif rec.get("skipped"):
+                terms.append({"arch": rec["arch"], "shape": rec["shape"],
+                              "mesh": rec["mesh"], "skipped": rec["skipped"]})
+        elif rec.get("mode") == "compile":
+            compiles.append(rec)
+    return terms, compiles
+
+
+def markdown_table(terms: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful FLOP ratio |\n|---|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    for t in terms:
+        if "skipped" in t:
+            rows.append(f"| {t['arch']} | {t['shape']} | {t['mesh']} | — | — | — "
+                        f"| SKIPPED | — |")
+            continue
+        rows.append(
+            f"| {t['arch']} | {t['shape']} | {t['mesh']} "
+            f"| {t['t_compute_s']:.3e} | {t['t_memory_s']:.3e} "
+            f"| {t['t_collective_s']:.3e} | **{t['dominant']}** "
+            f"| {t['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    terms, compiles = summarize(args.dir)
+    if args.json:
+        print(json.dumps(terms, indent=2))
+        return
+    ok = sum(1 for c in compiles if c.get("ok"))
+    print(f"compile records: {ok}/{len(compiles)} ok")
+    print(markdown_table(terms))
+
+
+if __name__ == "__main__":
+    main()

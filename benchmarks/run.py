@@ -1,0 +1,33 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# TonY (OpML'19) has no result tables — its claims are lifecycle behaviours —
+# so the benchmark suite quantifies each claimed behaviour (§2/§3) plus the
+# training/serving substrate and the roofline summary from the dry-runs.
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    rows: list[tuple[str, float, str]] = []
+    from benchmarks import orchestration, training
+    rows += orchestration.all_benches()
+    rows += training.all_benches()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    # roofline summary (if the dry-run matrix has been produced)
+    dr = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+    if os.path.isdir(dr):
+        from benchmarks.roofline import summarize
+        terms, compiles = summarize(dr)
+        ok = sum(1 for c in compiles if c.get("ok"))
+        print(f"dryrun_compile_ok,{float(ok)},{ok}/{len(compiles)} records")
+        done = [t for t in terms if "skipped" not in t]
+        print(f"roofline_records,{float(len(done))},see EXPERIMENTS.md §Roofline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fault-tolerance demo (paper §2.2): a worker dies mid-training; the AM
+tears the attempt down, negotiates fresh containers, broadcasts a NEW cluster
+spec, and the relaunched job restores from the last checkpoint.
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import tempfile
+
+from repro.configs import get_config
+from repro.core import TonYClient, YarnLikeBackend, job_spec_from_props, make_cluster
+from repro.launch.programs import make_train_program
+
+
+def main() -> None:
+    rm = make_cluster()
+    client = TonYClient(YarnLikeBackend(rm))
+    cfg = get_config("tony-paper-mlp").replace(d_model=128, num_heads=2,
+                                               num_kv_heads=2, d_ff=256,
+                                               vocab_size=512)
+    job = job_spec_from_props({
+        "tony.application.name": "fault-demo",
+        "tony.worker.instances": "2",
+        "tony.worker.memory": "4096",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+
+    trace = []
+    program = make_train_program(
+        cfg, steps=24, batch_size=8, seq_len=32,
+        ckpt_dir=tempfile.mkdtemp(prefix="fault-demo-"), ckpt_every=6,
+        fail_at=(1, 15),  # crash on attempt 1 at step 15 (ckpt exists at 12)
+        on_step=lambda s, m: trace.append((s, round(m["loss"], 3))))
+
+    result = client.run_and_wait(job, program)
+
+    print("attempts:", len(result.attempts))
+    print("attempt 1 failed tasks:", result.attempts[0].failed_tasks)
+    steps = [s for s, _ in trace]
+    resume = next(s for i, s in enumerate(steps[1:], 1) if s <= steps[i - 1])
+    print(f"attempt 2 resumed from checkpoint at step {resume} (not step 0)")
+    print("loss trace around the failure:",
+          [t for t in trace if 10 <= t[0] <= 18])
+    print("containers allocated total:",
+          rm.events.count("container_allocated"), "(2 per attempt)")
+    assert result.succeeded and len(result.attempts) == 2 and resume == 12
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Checkpointing — the fault-tolerance contract between TonY and the ML job.
+
+Pytrees are flattened to path-keyed npz archives; writes are atomic
+(tmp + rename) so a mid-write task kill never corrupts the latest checkpoint,
+which is exactly what the AM's relaunch path relies on.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, directory: str, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"ckpt_(\d{8})\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_pytree(template, directory: str, step: int | None = None):
+    """Restore into the structure of ``template`` (shapes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = dict(data)
+    keys = []
+    for p, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        if tuple(flat[key].shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{flat[key].shape} vs {leaf.shape}")
+        keys.append(flat[key])
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, keys)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+
+    def save(self, tree, step: int) -> str:
+        path = save_pytree(tree, self.directory, step)
+        self._gc()
+        return path
+
+    def restore(self, template, step: int | None = None):
+        return restore_pytree(template, self.directory, step)
+
+    def latest_step(self) -> int | None:
+        return latest_step(self.directory)
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        ckpts = sorted(f for f in os.listdir(self.directory)
+                       if re.fullmatch(r"ckpt_\d{8}\.npz", f))
+        for f in ckpts[:-self.keep]:
+            os.unlink(os.path.join(self.directory, f))

@@ -1,0 +1,54 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config("llama3-405b")`` returns the exact assigned full-size config;
+``get_smoke_config`` returns the reduced same-family variant for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig, smoke_variant
+
+ARCH_IDS = [
+    "recurrentgemma-2b",
+    "llama-3.2-vision-90b",
+    "llama3-405b",
+    "llama4-maverick-400b-a17b",
+    "rwkv6-3b",
+    "llama4-scout-17b-a16e",
+    "deepseek-coder-33b",
+    "whisper-base",
+    "qwen3-1.7b",
+    "llama3.2-3b",
+    # paper-native job config (TonY's canonical workload)
+    "tony-paper-mlp",
+]
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return smoke_variant(get_config(arch_id))
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_smoke_config",
+    "all_configs",
+    "smoke_variant",
+]

@@ -1,0 +1,24 @@
+"""Llama-3 405B — dense GQA flagship.
+
+[arXiv:2407.21783] 126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    arch_type="dense",
+    num_layers=126,
+    d_model=16_384,
+    num_heads=128,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=53_248,
+    vocab_size=128_256,
+    block_pattern=(("attn", "mlp"),),
+    mlp_variant="swiglu",
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    decode_window=8192,           # sliding-window decode variant for long_500k
+    supports_long_context=True,
+    source="arXiv:2407.21783",
+)

@@ -1,0 +1,29 @@
+"""Llama-4 Maverick 400B-A17B — MoE, 128 experts top-1, alternating MoE/dense.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E family] 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1 + shared expert on every other layer.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202_048,
+    block_pattern=(("attn", "mlp"), ("attn", "moe")),
+    mlp_variant="swiglu",
+    num_experts=128,
+    experts_per_token=1,
+    capacity_factor=1.25,
+    shared_expert=True,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    decode_window=8192,
+    supports_long_context=True,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

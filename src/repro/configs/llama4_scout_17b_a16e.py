@@ -1,0 +1,29 @@
+"""Llama-4 Scout 17B-A16E — MoE, 16 experts top-1 on every layer.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E] 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 16e top-1 + shared expert.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202_048,
+    block_pattern=(("attn", "moe"),),
+    mlp_variant="swiglu",
+    num_experts=16,
+    experts_per_token=1,
+    capacity_factor=1.25,
+    shared_expert=True,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    decode_window=8192,
+    supports_long_context=True,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

@@ -1,0 +1,31 @@
+"""Llama-3.2-Vision-90B — VLM decoder backbone with interleaved cross-attn.
+
+[hf:meta-llama/Llama-3.2-11B-Vision] 100L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256; every 5th layer cross-attends to projected vision
+patch embeddings (ViT frontend STUBBED per the assignment carve-out: 4096
+precomputed patch embeddings of d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    arch_type="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28_672,
+    vocab_size=128_256,
+    block_pattern=(
+        ("attn", "mlp"), ("attn", "mlp"), ("attn", "mlp"), ("attn", "mlp"),
+        ("cross", "mlp"),
+    ),
+    mlp_variant="swiglu",
+    rope_theta=500_000.0,
+    num_media_tokens=4096,
+    tie_embeddings=False,
+    decode_window=8192,           # sliding-window decode variant for long ctx
+    supports_long_context=True,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

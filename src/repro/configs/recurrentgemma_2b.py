@@ -1,0 +1,27 @@
+"""RecurrentGemma-2B — Griffin hybrid: RG-LRU + local attention, 1:2 ratio.
+
+[arXiv:2402.19427] 26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000,
+pattern (recurrent, recurrent, local-attn), window 2048, GeGLU, lru_width 2560.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    arch_type="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=(("rglru", "mlp"), ("rglru", "mlp"), ("local", "mlp")),
+    mlp_variant="geglu",
+    window_size=2048,
+    lru_width=2560,
+    conv1d_width=4,
+    logits_softcap=30.0,
+    tie_embeddings=True,
+    supports_long_context=True,   # recurrent state + bounded window
+    source="arXiv:2402.19427",
+)

@@ -1,0 +1,24 @@
+"""RWKV-6 "Finch" 3B — attention-free, data-dependent decay time-mix.
+
+[arXiv:2404.05892] 32L d_model=2560 d_ff=8960 vocab=65536; matrix-valued
+per-head WKV state with data-dependent decay, token-shift, channel-mix FFN.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    arch_type="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,            # d_model / rwkv_head_dim
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65_536,
+    block_pattern=(("rwkv", "cmix"),),
+    rwkv_head_dim=64,
+    pos_embedding="none",
+    tie_embeddings=False,
+    supports_long_context=True,   # constant-size recurrent state
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,31 @@
+"""Whisper-base — encoder-decoder audio backbone, conv frontend STUBBED.
+
+[arXiv:2212.04356] 6L enc + 6L dec, d_model=512 8H d_ff=2048 vocab=51865.
+The mel-spectrogram + conv feature extractor is stubbed per the assignment:
+``input_specs`` provides 1500 precomputed frame embeddings of d_model.
+
+long_500k is SKIPPED for this arch (full attention, learned positions with a
+small native max; no sub-quadratic variant) — see DESIGN.md §Shape skips.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    num_layers=6,                 # decoder layers
+    encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51_865,
+    block_pattern=(("attn", "mlp"), ("cross", "mlp")),
+    mlp_variant="gelu",
+    pos_embedding="learned",
+    max_position=65_536,          # backbone-generic table (native whisper: 448)
+    num_media_tokens=1500,        # audio frames after the stubbed conv frontend
+    tie_embeddings=True,
+    supports_long_context=False,  # documented skip for long_500k
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,23 @@
+"""TonY orchestrator core — the paper's contribution.
+
+Client -> (archive) -> scheduler backend -> ApplicationMaster -> containers
+-> TaskExecutors -> cluster spec -> ML child processes -> heartbeats ->
+exit statuses, with relaunch-on-failure and history/metrics collection.
+"""
+from repro.core.appmaster import ApplicationMaster, JobResult  # noqa: F401
+from repro.core.client import JobHandle, TonYClient, YarnLikeBackend  # noqa: F401
+from repro.core.cluster_spec import build_cluster_spec, task_env  # noqa: F401
+from repro.core.config import job_spec_from_props, parse_tony_xml, to_tony_xml  # noqa: F401
+from repro.core.events import Event, EventLog  # noqa: F401
+from repro.core.history import JobHistoryServer, MetricsAnalyzer  # noqa: F401
+from repro.core.resources import (  # noqa: F401
+    Container,
+    ContainerRequest,
+    JobSpec,
+    Node,
+    Resource,
+    TaskSpec,
+)
+from repro.core.rm import AllocationError, ResourceManager, make_cluster  # noqa: F401
+from repro.core.task_executor import JobContext, TaskExecutor  # noqa: F401
+from repro.core.workflow import Workflow, WorkflowNode  # noqa: F401

@@ -1,0 +1,254 @@
+"""TonY ApplicationMaster.
+
+Negotiates heterogeneous containers with the RM, launches a TaskExecutor per
+container, assembles + broadcasts the global cluster spec once every task has
+registered, monitors heartbeats, aggregates logs/UI/metrics, and — on any
+task failure — tears the attempt down, re-negotiates containers and
+relaunches (checkpoint restore is the ML program's side of the contract).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.cluster_spec import TaskAddress, build_cluster_spec
+from repro.core.events import EventLog
+from repro.core.resources import (
+    Container,
+    ContainerRequest,
+    ContainerState,
+    JobSpec,
+    PortAllocator,
+)
+from repro.core.rm import AllocationError, ResourceManager
+from repro.core.task_executor import (
+    ApplicationMasterProtocol,
+    JobContext,
+    MLProgram,
+    TaskExecutor,
+)
+
+HEARTBEAT_TIMEOUT_S = 5.0
+
+
+@dataclass
+class AttemptReport:
+    attempt: int
+    exit_statuses: dict[str, int] = field(default_factory=dict)
+    cluster_spec: dict | None = None
+    failed_tasks: list[str] = field(default_factory=list)
+    duration_s: float = 0.0
+
+
+@dataclass
+class JobResult:
+    app_id: str
+    final_status: str                 # SUCCEEDED | FAILED
+    attempts: list[AttemptReport]
+    ui_url: str | None
+    task_logs: dict[str, list[str]]
+    metrics: dict[str, dict[str, float]]
+
+    @property
+    def succeeded(self) -> bool:
+        return self.final_status == "SUCCEEDED"
+
+
+class ApplicationMaster(ApplicationMasterProtocol):
+    REGISTRATION_TIMEOUT_S = 60.0
+    PREEMPTION_BACKOFF_S = 0.3
+
+    def __init__(self, rm: ResourceManager, app_id: str, job: JobSpec,
+                 ml_program: MLProgram, events: EventLog | None = None,
+                 ports: PortAllocator | None = None,
+                 workdir: str = ""):
+        self.rm = rm
+        self.app_id = app_id
+        self.job = job
+        self.ml_program = ml_program
+        self.events = events or rm.events
+        self.ports = ports or PortAllocator()
+        self.workdir = workdir
+        self.ui_url: str | None = None
+        self.task_logs: dict[str, list[str]] = {}
+        self.metrics: dict[str, dict[str, float]] = {}
+        self._lock = threading.Lock()
+        self._registrations: dict[str, tuple[TaskExecutor, TaskAddress]] = {}
+        self._last_heartbeat: dict[str, float] = {}
+        self._exits: dict[str, int] = {}
+        self._all_registered = threading.Event()
+        self._world_size = sum(t.instances for t in self.job.tasks.values())
+
+    # ------------------------------------------------------------------
+    # Executor-facing protocol
+
+    def register_task(self, executor: TaskExecutor, addr: TaskAddress,
+                      ui_port: int | None = None) -> None:
+        with self._lock:
+            self._registrations[executor.task_id] = (executor, addr)
+            self._last_heartbeat[executor.task_id] = time.monotonic()
+            if ui_port is not None:
+                self.ui_url = f"http://{addr.host}:{ui_port}"
+                self.events.emit("am", "ui_registered", url=self.ui_url)
+            done = len(self._registrations) == self._world_size
+        self.events.emit("am", "task_registered", task=executor.task_id,
+                         endpoint=addr.endpoint)
+        if done:
+            self._all_registered.set()
+
+    def heartbeat(self, task_id: str) -> None:
+        with self._lock:
+            self._last_heartbeat[task_id] = time.monotonic()
+
+    def report_exit(self, task_id: str, status: int) -> None:
+        with self._lock:
+            self._exits[task_id] = status
+        self.events.emit("am", "task_exit", task=task_id, status=status)
+
+    # ------------------------------------------------------------------
+    def run(self) -> JobResult:
+        self.rm.set_app_state(self.app_id, "RUNNING")
+        attempts: list[AttemptReport] = []
+        for attempt in range(1, self.job.max_app_attempts + 1):
+            report = self._run_attempt(attempt)
+            attempts.append(report)
+            if not report.failed_tasks:
+                self.rm.set_app_state(self.app_id, "FINISHED")
+                return JobResult(self.app_id, "SUCCEEDED", attempts,
+                                 self.ui_url, self.task_logs, self.metrics)
+            self.events.emit("am", "attempt_failed", attempt=attempt,
+                             failed=report.failed_tasks)
+            if any(s == 137 for s in report.exit_statuses.values()):
+                # preempted by the scheduler: back off before renegotiating
+                # instead of ping-ponging with the preemptor's gang request
+                self.events.emit("am", "preemption_backoff", attempt=attempt)
+                time.sleep(self.PREEMPTION_BACKOFF_S)
+        self.rm.set_app_state(self.app_id, "FAILED")
+        return JobResult(self.app_id, "FAILED", attempts, self.ui_url,
+                         self.task_logs, self.metrics)
+
+    # ------------------------------------------------------------------
+    NEGOTIATION_TIMEOUT_S = 5.0
+    NEGOTIATION_BACKOFF_S = 0.05
+
+    def _negotiate_containers(self) -> dict[str, list[Container]]:
+        """Heterogeneous resource requests: e.g. GPU containers for workers,
+        CPU-only for parameter servers (paper §2.2).
+
+        Gang semantics with backoff: under contention the AM keeps asking
+        until the whole gang fits or the negotiation window expires — a
+        queued job waits for resources instead of burning an attempt
+        (the paper's 'resource contention' motivation)."""
+        deadline = time.monotonic() + self.NEGOTIATION_TIMEOUT_S
+        waited = False
+        while True:
+            allocated: dict[str, list[Container]] = {}
+            try:
+                for task_type, tspec in sorted(self.job.tasks.items()):
+                    req = ContainerRequest(tspec.resource, tspec.node_label)
+                    allocated[task_type] = self.rm.allocate_many(
+                        self.app_id, req, tspec.instances)
+                    self.events.emit("am", "containers_negotiated",
+                                     task_type=task_type, count=tspec.instances,
+                                     gpus=tspec.resource.gpus)
+                if waited:
+                    self.events.emit("am", "negotiation_unblocked")
+                return allocated
+            except AllocationError:
+                for cs in allocated.values():
+                    for c in cs:
+                        self.rm.release(c.container_id)
+                if time.monotonic() >= deadline:
+                    raise
+                if not waited:
+                    self.events.emit("am", "negotiation_waiting")
+                    waited = True
+                # under contention, ask the scheduler to reclaim capacity
+                # from over-share queues (capacity-scheduler preemption)
+                for _, tspec in sorted(self.job.tasks.items()):
+                    self.rm.try_preempt_for(
+                        self.app_id,
+                        ContainerRequest(tspec.resource, tspec.node_label),
+                        count=tspec.instances)
+                time.sleep(self.NEGOTIATION_BACKOFF_S)
+
+    def _run_attempt(self, attempt: int) -> AttemptReport:
+        t0 = time.monotonic()
+        self._registrations.clear()
+        self._exits.clear()
+        self._all_registered.clear()
+
+        try:
+            containers = self._negotiate_containers()
+        except AllocationError as e:
+            self.events.emit("am", "allocation_failed", error=str(e))
+            return AttemptReport(attempt, failed_tasks=["__allocation__"],
+                                 duration_s=time.monotonic() - t0)
+
+        ctx = JobContext(world_size=self._world_size, workdir=self.workdir)
+        ctx.shared["attempt"] = attempt
+        executors: list[TaskExecutor] = []
+        worker_like = "worker" if "worker" in containers else sorted(containers)[0]
+        for task_type, clist in sorted(containers.items()):
+            for idx, container in enumerate(clist):
+                self.rm.mark_running(container.container_id)
+                ex = TaskExecutor(
+                    task_type, idx, container, self, self.ml_program,
+                    self.job.args, ctx, self.ports, self.events,
+                    is_chief_worker=(task_type == worker_like and idx == 0))
+                executors.append(ex)
+        for ex in executors:
+            ex.start()
+
+        # registration barrier -> global cluster spec -> broadcast
+        spec = None
+        if self._all_registered.wait(self.REGISTRATION_TIMEOUT_S):
+            with self._lock:
+                addrs = [a for (_, a) in self._registrations.values()]
+            spec = build_cluster_spec(addrs)
+            self.events.emit("am", "cluster_spec_built",
+                             spec_sizes={k: len(v) for k, v in spec.items()})
+            for ex, _ in self._registrations.values():
+                ex.deliver_cluster_spec(spec)
+        else:
+            self.events.emit("am", "registration_timeout")
+            ctx.cancel.set()
+
+        # monitor: heartbeats + exits
+        failed: list[str] = []
+        while True:
+            with self._lock:
+                n_exit = len(self._exits)
+                any_fail = any(s != 0 for s in self._exits.values())
+                stale = [tid for tid, ts in self._last_heartbeat.items()
+                         if tid not in self._exits
+                         and time.monotonic() - ts > HEARTBEAT_TIMEOUT_S]
+            if any_fail or stale:
+                ctx.cancel.set()   # teardown remaining tasks (paper §2.2)
+                for tid in stale:
+                    self.events.emit("am", "heartbeat_lost", task=tid)
+            if n_exit == len(executors):
+                break
+            time.sleep(0.01)
+
+        for ex in executors:
+            ex.join(timeout=10.0)
+            self.task_logs[f"a{attempt}/{ex.task_id}"] = list(ex.log_lines)
+            if ex.metrics:
+                self.metrics[f"a{attempt}/{ex.task_id}"] = dict(ex.metrics)
+
+        with self._lock:
+            exits = dict(self._exits)
+        failed = sorted([tid for tid, s in exits.items() if s != 0]
+                        + [tid for tid in self._last_heartbeat
+                           if tid not in exits])
+
+        for clist in containers.values():
+            for c in clist:
+                st = ContainerState.COMPLETED if not failed else ContainerState.FAILED
+                self.rm.release(c.container_id, st)
+
+        return AttemptReport(attempt, exits, spec, failed,
+                             time.monotonic() - t0)

@@ -1,0 +1,117 @@
+"""TonY Client — the user-facing library.
+
+Packages the job (XML config + ML program reference + venv reference) into an
+archive, submits to the pluggable cluster scheduler, launches the AM, and
+surfaces status / UI URL / task logs back to the user (paper §2.1).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import tarfile
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.appmaster import ApplicationMaster, JobResult
+from repro.core.config import to_tony_xml
+from repro.core.events import EventLog
+from repro.core.resources import JobSpec
+from repro.core.rm import ResourceManager
+from repro.core.task_executor import MLProgram
+
+
+class SchedulerBackend:
+    """Generic scheduler interface (paper: 'the client interface is generic
+    and its implementation can support submitting to multiple schedulers')."""
+
+    def submit(self, job: JobSpec, archive_path: str,
+               ml_program: MLProgram) -> "JobHandle":
+        raise NotImplementedError
+
+
+@dataclass
+class JobHandle:
+    app_id: str
+    _thread: threading.Thread
+    _result_box: dict
+    rm: ResourceManager
+
+    def wait(self, timeout: float | None = None) -> JobResult:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"job {self.app_id} still running")
+        return self._result_box["result"]
+
+    @property
+    def state(self) -> str:
+        return self.rm.app_state(self.app_id)
+
+    def result(self) -> JobResult | None:
+        return self._result_box.get("result")
+
+
+class YarnLikeBackend(SchedulerBackend):
+    """Submits to the in-process simulated RM (the container-friendly stand-in
+    for YARN; swapping this class is the paper's scheduler-pluggability)."""
+
+    def __init__(self, rm: ResourceManager, workdir: str = ""):
+        self.rm = rm
+        self.workdir = workdir
+
+    def submit(self, job: JobSpec, archive_path: str,
+               ml_program: MLProgram) -> JobHandle:
+        app_id = self.rm.submit_application(job.name, job.queue)
+        am = ApplicationMaster(self.rm, app_id, job, ml_program,
+                               workdir=self.workdir)
+        box: dict = {}
+
+        def run():
+            box["result"] = am.run()
+
+        t = threading.Thread(target=run, name=f"am-{app_id}", daemon=True)
+        t.start()
+        return JobHandle(app_id, t, box, self.rm)
+
+
+class TonYClient:
+    def __init__(self, backend: SchedulerBackend, events: EventLog | None = None):
+        self.backend = backend
+        self.events = events or EventLog()
+
+    # ------------------------------------------------------------------
+    def package_archive(self, job: JobSpec, workdir: str | None = None) -> str:
+        """Build the submission archive: tony.xml + program + venv manifest
+        (a real tarball, as the client ships to the cluster)."""
+        workdir = workdir or tempfile.mkdtemp(prefix="tony-archive-")
+        os.makedirs(workdir, exist_ok=True)
+        path = os.path.join(workdir, f"{job.name}.tar.gz")
+        with tarfile.open(path, "w:gz") as tar:
+            def add_bytes(name: str, data: bytes):
+                info = tarfile.TarInfo(name)
+                info.size = len(data)
+                tar.addfile(info, io.BytesIO(data))
+
+            add_bytes("tony.xml", to_tony_xml(job).encode())
+            add_bytes("program.ref", (job.ml_program or "inline").encode())
+            add_bytes("venv.ref", (job.venv or "system").encode())
+            add_bytes("args.json", json.dumps(job.args, sort_keys=True).encode())
+        return path
+
+    def submit(self, job: JobSpec, ml_program: MLProgram) -> JobHandle:
+        t0 = time.monotonic()
+        archive = self.package_archive(job)
+        handle = self.backend.submit(job, archive, ml_program)
+        self.events.emit("client", "job_submitted", app_id=handle.app_id,
+                         archive=archive, latency_s=time.monotonic() - t0)
+        return handle
+
+    def run_and_wait(self, job: JobSpec, ml_program: MLProgram,
+                     timeout: float | None = None) -> JobResult:
+        return self.submit(job, ml_program).wait(timeout)
+
+
+MLProgramT = Callable  # re-export convenience

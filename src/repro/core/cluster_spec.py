@@ -1,0 +1,48 @@
+"""Global cluster spec — the TF_CONFIG-shaped JSON the AM assembles from task
+registrations and broadcasts to every TaskExecutor."""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TaskAddress:
+    task_type: str
+    index: int
+    host: str
+    port: int
+
+    @property
+    def endpoint(self) -> str:
+        return f"{self.host}:{self.port}"
+
+
+def build_cluster_spec(addresses: list[TaskAddress]) -> dict[str, list[str]]:
+    """{"worker": ["host:port", ...], "ps": [...]} ordered by task index."""
+    spec: dict[str, list[TaskAddress]] = {}
+    for a in addresses:
+        spec.setdefault(a.task_type, []).append(a)
+    return {
+        t: [a.endpoint for a in sorted(addrs, key=lambda a: a.index)]
+        for t, addrs in sorted(spec.items())
+    }
+
+
+def task_env(cluster_spec: dict[str, list[str]], task_type: str, index: int,
+             job_args: dict[str, str]) -> dict[str, str]:
+    """Environment a TaskExecutor materializes before spawning the ML child
+    process (TonY sets TF_CONFIG-equivalent variables)."""
+    env = {
+        "CLUSTER_SPEC": json.dumps(cluster_spec, sort_keys=True),
+        "TF_CONFIG": json.dumps({
+            "cluster": cluster_spec,
+            "task": {"type": task_type, "index": index},
+        }, sort_keys=True),
+        "TASK_TYPE": task_type,
+        "TASK_INDEX": str(index),
+        "WORLD_SIZE": str(sum(len(v) for v in cluster_spec.values())),
+    }
+    for k, v in job_args.items():
+        env[f"JOB_ARG_{k.upper()}"] = str(v)
+    return env

@@ -1,0 +1,105 @@
+"""TonY job configuration: XML schema (tony.xml) -> JobSpec.
+
+Faithful to TonY's property style::
+
+    <configuration>
+      <property><name>tony.worker.instances</name><value>4</value></property>
+      <property><name>tony.worker.memory</name><value>8192</value></property>
+      <property><name>tony.worker.gpus</name><value>1</value></property>
+      <property><name>tony.worker.node-label</name><value>gpu</value></property>
+      <property><name>tony.ps.instances</name><value>2</value></property>
+      <property><name>tony.yarn.queue</name><value>default</value></property>
+      <property><name>tony.application.name</name><value>mnist</value></property>
+    </configuration>
+"""
+from __future__ import annotations
+
+import io
+import xml.etree.ElementTree as ET
+
+from repro.core.resources import JobSpec, Resource, TaskSpec
+
+_DEFAULT_RESOURCE = Resource(memory_mb=2048, vcores=1, gpus=0)
+_RESERVED = {"application", "yarn", "am"}
+
+
+def parse_tony_xml(text_or_path: str) -> JobSpec:
+    if "\n" in text_or_path or text_or_path.strip().startswith("<"):
+        tree = ET.parse(io.StringIO(text_or_path))
+    else:
+        tree = ET.parse(text_or_path)
+    props: dict[str, str] = {}
+    for prop in tree.getroot().findall("property"):
+        name = prop.findtext("name", "").strip()
+        value = prop.findtext("value", "").strip()
+        if name:
+            props[name] = value
+    return job_spec_from_props(props)
+
+
+def job_spec_from_props(props: dict[str, str]) -> JobSpec:
+    task_fields: dict[str, dict[str, str]] = {}
+    name = props.get("tony.application.name", "tony-job")
+    queue = props.get("tony.yarn.queue", "default")
+    ml_program = props.get("tony.application.program", "")
+    venv = props.get("tony.application.venv", "")
+    max_attempts = int(props.get("tony.application.max-attempts", "3"))
+    args = {k.split("tony.args.", 1)[1]: v for k, v in props.items()
+            if k.startswith("tony.args.")}
+    sched = {k.split("tony.yarn.", 1)[1]: v for k, v in props.items()
+             if k.startswith("tony.yarn.")}
+
+    for key, value in props.items():
+        parts = key.split(".")
+        if len(parts) != 3 or parts[0] != "tony":
+            continue
+        _, task_type, field = parts
+        if task_type in _RESERVED or task_type in ("args", "yarn"):
+            continue
+        task_fields.setdefault(task_type, {})[field] = value
+
+    tasks: dict[str, TaskSpec] = {}
+    for task_type, fields in task_fields.items():
+        instances = int(fields.get("instances", "0"))
+        if instances <= 0:
+            continue
+        res = Resource(
+            memory_mb=int(fields.get("memory", _DEFAULT_RESOURCE.memory_mb)),
+            vcores=int(fields.get("vcores", _DEFAULT_RESOURCE.vcores)),
+            gpus=int(fields.get("gpus", "0")),
+        )
+        tasks[task_type] = TaskSpec(task_type, instances, res,
+                                    fields.get("node-label") or None)
+    if not tasks:
+        raise ValueError("job config declares no task instances")
+    return JobSpec(name=name, tasks=tasks, queue=queue, ml_program=ml_program,
+                   venv=venv, args=args, scheduler_conf=sched,
+                   max_app_attempts=max_attempts)
+
+
+def to_tony_xml(spec: JobSpec) -> str:
+    """Serialize a JobSpec back to tony.xml (round-trip tested)."""
+    root = ET.Element("configuration")
+
+    def add(name, value):
+        p = ET.SubElement(root, "property")
+        ET.SubElement(p, "name").text = name
+        ET.SubElement(p, "value").text = str(value)
+
+    add("tony.application.name", spec.name)
+    add("tony.yarn.queue", spec.queue)
+    if spec.ml_program:
+        add("tony.application.program", spec.ml_program)
+    if spec.venv:
+        add("tony.application.venv", spec.venv)
+    add("tony.application.max-attempts", spec.max_app_attempts)
+    for t in spec.tasks.values():
+        add(f"tony.{t.task_type}.instances", t.instances)
+        add(f"tony.{t.task_type}.memory", t.resource.memory_mb)
+        add(f"tony.{t.task_type}.vcores", t.resource.vcores)
+        add(f"tony.{t.task_type}.gpus", t.resource.gpus)
+        if t.node_label:
+            add(f"tony.{t.task_type}.node-label", t.node_label)
+    for k, v in spec.args.items():
+        add(f"tony.args.{k}", v)
+    return ET.tostring(root, encoding="unicode")

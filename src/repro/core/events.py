@@ -1,0 +1,38 @@
+"""Event log shared by RM / AM / executors — the substrate for the history
+server, metrics analyzer and tests (deterministic, inspectable)."""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class Event:
+    ts: float
+    source: str       # rm | am | executor:<task> | client
+    kind: str         # e.g. container_allocated, task_registered, heartbeat
+    payload: dict[str, Any] = field(default_factory=dict)
+
+
+class EventLog:
+    def __init__(self):
+        self._events: list[Event] = []
+        self._lock = threading.Lock()
+
+    def emit(self, source: str, kind: str, **payload: Any) -> Event:
+        ev = Event(time.monotonic(), source, kind, payload)
+        with self._lock:
+            self._events.append(ev)
+        return ev
+
+    def all(self) -> list[Event]:
+        with self._lock:
+            return list(self._events)
+
+    def of_kind(self, kind: str) -> list[Event]:
+        return [e for e in self.all() if e.kind == kind]
+
+    def count(self, kind: str) -> int:
+        return len(self.of_kind(kind))

@@ -1,0 +1,86 @@
+"""Job history + metrics analysis (the paper's monitoring story + the Dr.
+Elephant hook from §3: aggregate per-task metrics, suggest better settings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.appmaster import JobResult
+from repro.core.resources import JobSpec
+
+
+@dataclass
+class HistoryEntry:
+    job: JobSpec
+    result: JobResult
+
+
+class JobHistoryServer:
+    """One place to find UI URL, task logs and attempts per application
+    (paper: 'users can directly access the visualization UI and task logs
+    from one place')."""
+
+    def __init__(self):
+        self._entries: dict[str, HistoryEntry] = {}
+
+    def record(self, job: JobSpec, result: JobResult) -> None:
+        self._entries[result.app_id] = HistoryEntry(job, result)
+
+    def get(self, app_id: str) -> HistoryEntry:
+        return self._entries[app_id]
+
+    def all_apps(self) -> list[str]:
+        return sorted(self._entries)
+
+    def summary(self, app_id: str) -> dict:
+        e = self._entries[app_id]
+        return {
+            "app_id": app_id,
+            "name": e.job.name,
+            "status": e.result.final_status,
+            "attempts": len(e.result.attempts),
+            "ui_url": e.result.ui_url,
+            "task_logs": sorted(e.result.task_logs),
+        }
+
+
+@dataclass
+class Suggestion:
+    task_type: str
+    kind: str
+    message: str
+
+
+class MetricsAnalyzer:
+    """Dr.-Elephant-style advisor: compares requested resources against
+    observed task metrics and suggests config changes."""
+
+    MEM_WASTE_THRESHOLD = 0.5   # using <50% of requested memory
+    SLOW_HEARTBEAT_RATIO = 2.0
+
+    def analyze(self, job: JobSpec, result: JobResult) -> list[Suggestion]:
+        out: list[Suggestion] = []
+        peak_by_type: dict[str, float] = {}
+        for task_key, m in result.metrics.items():
+            ttype = task_key.split("/")[-1].split(":")[0]
+            if "peak_memory_mb" in m:
+                peak_by_type[ttype] = max(peak_by_type.get(ttype, 0.0),
+                                          m["peak_memory_mb"])
+        for ttype, tspec in job.tasks.items():
+            peak = peak_by_type.get(ttype)
+            if peak is not None and peak < tspec.resource.memory_mb * self.MEM_WASTE_THRESHOLD:
+                out.append(Suggestion(
+                    ttype, "memory_overprovisioned",
+                    f"{ttype} requested {tspec.resource.memory_mb}MB but peaked at "
+                    f"{peak:.0f}MB; consider lowering tony.{ttype}.memory"))
+        if len(result.attempts) > 1:
+            out.append(Suggestion(
+                "*", "flaky",
+                f"job needed {len(result.attempts)} attempts; check task logs "
+                f"for transient failures"))
+        return out
+
+
+@dataclass
+class UtilizationReport:
+    per_task_type: dict[str, dict] = field(default_factory=dict)

@@ -1,0 +1,129 @@
+"""Cluster resource model: resources, nodes, containers, requests.
+
+Mirrors the YARN objects the TonY AM negotiates with — memory/vcores/GPUs per
+container, node labels (e.g. 'gpu', 'highmem'), and container lifecycle.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from enum import Enum
+
+
+@dataclass(frozen=True)
+class Resource:
+    memory_mb: int
+    vcores: int
+    gpus: int = 0
+
+    def fits_in(self, other: "Resource") -> bool:
+        return (self.memory_mb <= other.memory_mb
+                and self.vcores <= other.vcores
+                and self.gpus <= other.gpus)
+
+    def __add__(self, o: "Resource") -> "Resource":
+        return Resource(self.memory_mb + o.memory_mb, self.vcores + o.vcores,
+                        self.gpus + o.gpus)
+
+    def __sub__(self, o: "Resource") -> "Resource":
+        return Resource(self.memory_mb - o.memory_mb, self.vcores - o.vcores,
+                        self.gpus - o.gpus)
+
+    @property
+    def nonnegative(self) -> bool:
+        return self.memory_mb >= 0 and self.vcores >= 0 and self.gpus >= 0
+
+
+ZERO = Resource(0, 0, 0)
+
+
+@dataclass
+class Node:
+    node_id: str
+    capacity: Resource
+    labels: frozenset[str] = frozenset()
+    used: Resource = ZERO
+
+    def can_fit(self, r: Resource) -> bool:
+        return (r + self.used).fits_in(self.capacity)
+
+    @property
+    def available(self) -> Resource:
+        return self.capacity - self.used
+
+
+class ContainerState(Enum):
+    ALLOCATED = "allocated"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    FAILED = "failed"
+    RELEASED = "released"
+    PREEMPTED = "preempted"
+
+
+_container_ids = itertools.count(1)
+
+
+@dataclass
+class Container:
+    container_id: str
+    node_id: str
+    resource: Resource
+    state: ContainerState = ContainerState.ALLOCATED
+    exit_status: int | None = None
+
+    @staticmethod
+    def fresh(node_id: str, resource: Resource) -> "Container":
+        return Container(f"container_{next(_container_ids):06d}", node_id, resource)
+
+
+@dataclass(frozen=True)
+class ContainerRequest:
+    """One container ask: resource + optional node-label constraint + queue."""
+    resource: Resource
+    node_label: str | None = None
+    priority: int = 0
+
+
+@dataclass
+class TaskSpec:
+    """Per-task-type specification parsed from the job's XML config."""
+    task_type: str                 # worker | ps | chief | evaluator | ...
+    instances: int
+    resource: Resource
+    node_label: str | None = None
+
+
+@dataclass
+class JobSpec:
+    """Everything the TonY client packages and submits."""
+    name: str
+    tasks: dict[str, TaskSpec]
+    queue: str = "default"
+    ml_program: str = ""           # entry-point reference
+    venv: str = ""                 # virtualenv / docker image reference
+    args: dict[str, str] = field(default_factory=dict)
+    scheduler_conf: dict[str, str] = field(default_factory=dict)
+    max_app_attempts: int = 3
+
+    def total_resource(self) -> Resource:
+        tot = ZERO
+        for t in self.tasks.values():
+            for _ in range(t.instances):
+                tot = tot + t.resource
+        return tot
+
+
+class PortAllocator:
+    """Process-wide fake port allocator (one per simulated cluster host)."""
+
+    def __init__(self, start: int = 20000):
+        self._next = start
+        self._lock = threading.Lock()
+
+    def allocate(self) -> int:
+        with self._lock:
+            p = self._next
+            self._next += 1
+            return p

@@ -1,0 +1,257 @@
+"""Simulated ResourceManager: capacity-scheduler queues, labelled nodes,
+container allocation/release, and application lifecycle.
+
+This is the pluggable "cluster scheduler" behind the TonY client interface
+(the paper's YARN). It is deliberately a faithful *model*, not a mock: queue
+capacity shares are enforced, node labels constrain placement, resources are
+conserved, and every transition is event-logged so scheduling invariants can
+be property-tested.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+
+from repro.core.events import EventLog
+from repro.core.resources import (
+    ZERO,
+    Container,
+    ContainerRequest,
+    ContainerState,
+    Node,
+    Resource,
+)
+
+
+@dataclass
+class Queue:
+    name: str
+    capacity_fraction: float          # share of cluster resources
+    used: Resource = ZERO
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+_app_ids = itertools.count(1)
+
+
+class ResourceManager:
+    """YARN-RM-alike. Thread-safe; all public methods may be called from AM
+    threads."""
+
+    def __init__(self, nodes: list[Node], queues: dict[str, float] | None = None,
+                 event_log: EventLog | None = None, elastic: bool = False):
+        self.nodes = {n.node_id: n for n in nodes}
+        queues = queues or {"default": 1.0}
+        assert abs(sum(queues.values()) - 1.0) < 1e-6, "queue shares must sum to 1"
+        self.queues = {n: Queue(n, f) for n, f in queues.items()}
+        # elastic (YARN-style): queues may borrow idle capacity beyond their
+        # share; preemption (try_preempt_for) reclaims it on demand
+        self.elastic = elastic
+        self.events = event_log or EventLog()
+        self._lock = threading.RLock()
+        self._containers: dict[str, Container] = {}
+        self._container_queue: dict[str, str] = {}
+        self._apps: dict[str, dict] = {}
+
+    # ------------------------------------------------------------------
+    def cluster_capacity(self) -> Resource:
+        tot = ZERO
+        for n in self.nodes.values():
+            tot = tot + n.capacity
+        return tot
+
+    def queue_limit(self, queue: str) -> Resource:
+        cap = self.cluster_capacity()
+        f = self.queues[queue].capacity_fraction
+        return Resource(int(cap.memory_mb * f), int(cap.vcores * f),
+                        int(cap.gpus * f))
+
+    # ------------------------------------------------------------------
+    def submit_application(self, name: str, queue: str) -> str:
+        with self._lock:
+            if queue not in self.queues:
+                raise AllocationError(f"unknown queue {queue!r}")
+            app_id = f"application_{next(_app_ids):06d}"
+            self._apps[app_id] = {"name": name, "queue": queue, "state": "SUBMITTED"}
+            self.events.emit("rm", "app_submitted", app_id=app_id, queue=queue)
+            return app_id
+
+    def app_state(self, app_id: str) -> str:
+        return self._apps[app_id]["state"]
+
+    def set_app_state(self, app_id: str, state: str) -> None:
+        with self._lock:
+            self._apps[app_id]["state"] = state
+            self.events.emit("rm", "app_state", app_id=app_id, state=state)
+
+    # ------------------------------------------------------------------
+    def allocate(self, app_id: str, request: ContainerRequest) -> Container:
+        """Allocate one container honoring queue share + node labels.
+
+        Raises AllocationError when the queue is over its share or no labelled
+        node can fit the request.
+        """
+        with self._lock:
+            queue = self._apps[app_id]["queue"]
+            q = self.queues[queue]
+            limit = self.queue_limit(queue)
+            if not self.elastic and not (q.used + request.resource).fits_in(limit):
+                raise AllocationError(
+                    f"queue {queue!r} over capacity: used={q.used} ask={request.resource} limit={limit}")
+            for node in sorted(self.nodes.values(),
+                               key=lambda n: -n.available.memory_mb):
+                if request.node_label and request.node_label not in node.labels:
+                    continue
+                if node.can_fit(request.resource):
+                    node.used = node.used + request.resource
+                    q.used = q.used + request.resource
+                    c = Container.fresh(node.node_id, request.resource)
+                    self._containers[c.container_id] = c
+                    self._container_queue[c.container_id] = queue
+                    self.events.emit("rm", "container_allocated",
+                                     app_id=app_id, container_id=c.container_id,
+                                     node=node.node_id,
+                                     label=request.node_label,
+                                     memory_mb=request.resource.memory_mb,
+                                     gpus=request.resource.gpus)
+                    return c
+            raise AllocationError(
+                f"no node satisfies {request.resource} label={request.node_label!r}")
+
+    def allocate_many(self, app_id: str, request: ContainerRequest,
+                      count: int) -> list[Container]:
+        out = []
+        try:
+            for _ in range(count):
+                out.append(self.allocate(app_id, request))
+        except AllocationError:
+            for c in out:
+                self.release(c.container_id)
+            raise
+        return out
+
+    def release(self, container_id: str,
+                state: ContainerState = ContainerState.RELEASED,
+                exit_status: int | None = None) -> None:
+        with self._lock:
+            c = self._containers.get(container_id)
+            if c is None or c.state in (ContainerState.RELEASED,
+                                        ContainerState.COMPLETED,
+                                        ContainerState.FAILED,
+                                        ContainerState.PREEMPTED):
+                return
+            node = self.nodes[c.node_id]
+            node.used = node.used - c.resource
+            queue = self._container_queue[container_id]
+            self.queues[queue].used = self.queues[queue].used - c.resource
+            c.state = state
+            c.exit_status = exit_status
+            self.events.emit("rm", "container_released",
+                             container_id=container_id, state=state.value)
+
+    def mark_running(self, container_id: str) -> None:
+        with self._lock:
+            self._containers[container_id].state = ContainerState.RUNNING
+
+    # ------------------------------------------------------------------
+    # Capacity-scheduler preemption: queues running OVER their share can be
+    # reclaimed when an under-share queue cannot satisfy a request.
+
+    def queue_over_share(self, queue: str) -> bool:
+        with self._lock:
+            q = self.queues[queue]
+            lim = self.queue_limit(queue)
+            return not q.used.fits_in(lim)
+
+    def _gang_fits(self, request: ContainerRequest, count: int) -> bool:
+        """Greedy bin check: could ``count`` copies of ``request`` be placed
+        on the currently-available node capacities?"""
+        avail = []
+        for n in self.nodes.values():
+            if request.node_label and request.node_label not in n.labels:
+                continue
+            avail.append(n.available)
+        placed = 0
+        for free in sorted(avail, key=lambda r: -r.memory_mb):
+            while request.resource.fits_in(free) and placed < count:
+                free = free - request.resource
+                placed += 1
+        return placed >= count
+
+    def try_preempt_for(self, app_id: str, request: ContainerRequest,
+                        count: int = 1) -> int:
+        """Preempt containers from over-share queues until ``count`` copies of
+        ``request`` could fit (or no victims remain). Returns the number
+        preempted. The victim AMs observe their containers' PREEMPTED state
+        via executor heartbeats and relaunch through their normal
+        fault-tolerance path."""
+        preempted = 0
+        with self._lock:
+            my_queue = self._apps[app_id]["queue"]
+            victims = [c for c in self.live_containers()
+                       if self._container_queue[c.container_id] != my_queue
+                       and self.queue_over_share(
+                           self._container_queue[c.container_id])]
+            for victim in victims:
+                if self._gang_fits(request, count):
+                    break
+                self.release(victim.container_id, ContainerState.PREEMPTED,
+                             exit_status=137)
+                victim.state = ContainerState.PREEMPTED
+                self.events.emit("rm", "container_preempted",
+                                 container_id=victim.container_id,
+                                 victim_queue=self._container_queue[
+                                     victim.container_id],
+                                 for_queue=my_queue)
+                preempted += 1
+        return preempted
+
+    def container_state(self, container_id: str) -> ContainerState:
+        with self._lock:
+            return self._containers[container_id].state
+
+    # ------------------------------------------------------------------
+    def live_containers(self) -> list[Container]:
+        with self._lock:
+            return [c for c in self._containers.values()
+                    if c.state in (ContainerState.ALLOCATED, ContainerState.RUNNING)]
+
+    def invariants_ok(self) -> bool:
+        """Resource conservation: per-node and per-queue accounting matches
+        the sum of live containers; nothing exceeds capacity."""
+        with self._lock:
+            per_node: dict[str, Resource] = {nid: ZERO for nid in self.nodes}
+            per_queue: dict[str, Resource] = {qn: ZERO for qn in self.queues}
+            for c in self.live_containers():
+                per_node[c.node_id] = per_node[c.node_id] + c.resource
+                per_queue[self._container_queue[c.container_id]] = (
+                    per_queue[self._container_queue[c.container_id]] + c.resource)
+            for nid, n in self.nodes.items():
+                if per_node[nid] != n.used or not n.used.fits_in(n.capacity):
+                    return False
+                if not n.used.nonnegative:
+                    return False
+            for qn, q in self.queues.items():
+                if per_queue[qn] != q.used:
+                    return False
+            return True
+
+
+def make_cluster(num_gpu_nodes: int = 4, num_cpu_nodes: int = 4,
+                 gpus_per_node: int = 4, memory_mb: int = 256_000,
+                 vcores: int = 64,
+                 queues: dict[str, float] | None = None,
+                 event_log: EventLog | None = None) -> ResourceManager:
+    """Convenience factory for a small heterogeneous cluster."""
+    nodes = []
+    for i in range(num_gpu_nodes):
+        nodes.append(Node(f"gpu-node-{i}", Resource(memory_mb, vcores, gpus_per_node),
+                          frozenset({"gpu"})))
+    for i in range(num_cpu_nodes):
+        nodes.append(Node(f"cpu-node-{i}", Resource(memory_mb, vcores, 0),
+                          frozenset({"highmem"})))
+    return ResourceManager(nodes, queues, event_log)

@@ -1,0 +1,206 @@
+"""TaskExecutor — runs inside each allocated container.
+
+Lifecycle (paper §2.2, step-for-step):
+  1. allocate a port, register (host, port) with the AM
+  2. wait for the AM's global cluster spec broadcast
+  3. materialize the spec + task config as environment variables
+  4. spawn the ML program as a child "process" (a callable in a thread)
+  5. heartbeat to the AM while the child runs; the first worker also
+     registers a visualization UI port (TensorBoard analogue)
+  6. register the final exit status with the AM and terminate
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.cluster_spec import TaskAddress, task_env
+from repro.core.events import EventLog
+from repro.core.resources import Container, PortAllocator
+
+# MLProgram: (env, job_context) -> exit code
+MLProgram = Callable[[dict[str, str], "JobContext"], int]
+
+
+class CancellableBarrier:
+    """Reusable barrier that unblocks (returning False) on cancel/timeout
+    instead of breaking permanently like threading.Barrier."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self._count = 0
+        self._generation = 0
+        self._cond = threading.Condition()
+
+    def wait(self, cancel: threading.Event | None = None,
+             timeout: float = 300.0) -> bool:
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            gen = self._generation
+            self._count += 1
+            if self._count == self.n:
+                self._count = 0
+                self._generation += 1
+                self._cond.notify_all()
+                return True
+            while self._generation == gen:
+                if (cancel is not None and cancel.is_set()) or \
+                        time.monotonic() > deadline:
+                    self._count -= 1
+                    return False
+                self._cond.wait(0.05)
+            return True
+
+
+@dataclass
+class JobContext:
+    """In-process stand-in for the ML framework's own distributed transport.
+
+    TonY is framework-agnostic: after launch, tasks coordinate via the
+    framework's protocol (RPC/MPI/...). In this single-process simulation the
+    context carries a barrier + shared dict so all task childs of one job
+    attempt can rendezvous — mirroring the launch-time contract without
+    reimplementing NCCL.
+    """
+    world_size: int
+    barrier: CancellableBarrier = None  # type: ignore[assignment]
+    shared: dict[str, Any] = field(default_factory=dict)
+    cancel: threading.Event = field(default_factory=threading.Event)
+    workdir: str = ""
+
+    def __post_init__(self):
+        if self.barrier is None:
+            self.barrier = CancellableBarrier(self.world_size)
+
+    def rendezvous(self, timeout: float = 300.0) -> bool:
+        return self.barrier.wait(self.cancel, timeout)
+
+
+class TaskExecutor:
+    HEARTBEAT_INTERVAL_S = 0.02
+
+    def __init__(self, task_type: str, index: int, container: Container,
+                 am: "ApplicationMasterProtocol", ml_program: MLProgram,
+                 job_args: dict[str, str], ctx: JobContext,
+                 ports: PortAllocator, events: EventLog,
+                 is_chief_worker: bool = False):
+        self.task_type = task_type
+        self.index = index
+        self.container = container
+        self.am = am
+        self.ml_program = ml_program
+        self.job_args = job_args
+        self.ctx = ctx
+        self.ports = ports
+        self.events = events
+        self.is_chief_worker = is_chief_worker
+        self.task_id = f"{task_type}:{index}"
+        self.exit_status: int | None = None
+        self.log_lines: list[str] = []
+        self.metrics: dict[str, float] = {}
+        self._cluster_spec_ready = threading.Event()
+        self._cluster_spec: dict | None = None
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._run, name=f"executor-{self.task_id}",
+                                        daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._thread:
+            self._thread.join(timeout)
+
+    def deliver_cluster_spec(self, spec: dict) -> None:
+        self._cluster_spec = spec
+        self._cluster_spec_ready.set()
+
+    def log(self, line: str) -> None:
+        self.log_lines.append(line)
+
+    # ------------------------------------------------------------------
+    def _run(self) -> None:
+        src = f"executor:{self.task_id}"
+        try:
+            # 1. port allocation + registration
+            port = self.ports.allocate()
+            addr = TaskAddress(self.task_type, self.index,
+                               self.container.node_id, port)
+            ui_port = None
+            if self.is_chief_worker:
+                ui_port = self.ports.allocate()  # TensorBoard analogue
+            self.events.emit(src, "task_registering", endpoint=addr.endpoint)
+            self.am.register_task(self, addr, ui_port=ui_port)
+
+            # 2. wait for the global cluster spec
+            if not self._cluster_spec_ready.wait(timeout=60.0):
+                raise TimeoutError("cluster spec broadcast never arrived")
+
+            # 3. env materialization
+            env = task_env(self._cluster_spec, self.task_type, self.index,
+                           self.job_args)
+            env["CONTAINER_ID"] = self.container.container_id
+            env["UI_PORT"] = str(ui_port) if ui_port else ""
+            self.events.emit(src, "task_env_ready", world=env["WORLD_SIZE"])
+
+            # 4. spawn the child + 5. heartbeat until done
+            result: dict[str, Any] = {}
+
+            def child():
+                try:
+                    result["exit"] = int(self.ml_program(env, self.ctx) or 0)
+                except Exception as e:  # noqa: BLE001 - child crash is data
+                    self.log(f"child crashed: {type(e).__name__}: {e}")
+                    self.log(traceback.format_exc())
+                    result["exit"] = 1
+
+            child_t = threading.Thread(target=child, name=f"ml-{self.task_id}",
+                                       daemon=True)
+            child_t.start()
+            while child_t.is_alive():
+                self.am.heartbeat(self.task_id)
+                if self.ctx.cancel.is_set():
+                    # AM-initiated teardown: abandon the child (thread stand-in
+                    # for SIGKILL on the real container process)
+                    self.log("teardown requested; abandoning child")
+                    result.setdefault("exit", 143)
+                    break
+                if self.container.state.value == "preempted":
+                    # the scheduler reclaimed this container (capacity-
+                    # scheduler preemption); report SIGKILL-style exit so the
+                    # AM relaunches via the normal fault-tolerance path
+                    self.log("container preempted by scheduler")
+                    result.setdefault("exit", 137)
+                    break
+                child_t.join(self.HEARTBEAT_INTERVAL_S)
+
+            self.exit_status = int(result.get("exit", 0))
+            self.metrics = dict(self.ctx.shared.get(f"metrics:{self.task_id}", {}))
+        except Exception as e:  # noqa: BLE001
+            self.log(f"executor error: {e}")
+            self.exit_status = 2
+        finally:
+            self.events.emit(src, "task_finished", exit=self.exit_status)
+            self.am.report_exit(self.task_id, self.exit_status or 0)
+
+
+class ApplicationMasterProtocol:
+    """Interface TaskExecutors call back into (implemented by the AM)."""
+
+    def register_task(self, executor: TaskExecutor, addr: TaskAddress,
+                      ui_port: int | None = None) -> None:
+        raise NotImplementedError
+
+    def heartbeat(self, task_id: str) -> None:
+        raise NotImplementedError
+
+    def report_exit(self, task_id: str, status: int) -> None:
+        raise NotImplementedError
+
+
+def _now() -> float:
+    return time.monotonic()

@@ -1,0 +1,131 @@
+"""Azkaban-like workflow manager with a TonY job type (paper §2.1: 'we built
+a TonY plugin for one such workflow manager, Azkaban, that lets users add
+distributed ML jobs in the same workflow alongside Spark, MapReduce, and
+other jobs')."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.client import TonYClient
+from repro.core.resources import JobSpec
+from repro.core.task_executor import MLProgram
+
+
+@dataclass
+class WorkflowNode:
+    name: str
+    run: Callable[[dict[str, Any]], Any]       # context -> result
+    deps: tuple[str, ...] = ()
+    job_type: str = "command"                   # command | tony | spark | ...
+
+
+@dataclass
+class NodeResult:
+    name: str
+    status: str                                 # SUCCEEDED | FAILED | SKIPPED
+    value: Any = None
+    error: str | None = None
+
+
+class Workflow:
+    """Topological, dependency-parallel execution of a DAG of nodes."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.nodes: dict[str, WorkflowNode] = {}
+
+    def add(self, node: WorkflowNode) -> "Workflow":
+        if node.name in self.nodes:
+            raise ValueError(f"duplicate node {node.name}")
+        self.nodes[node.name] = node
+        return self
+
+    def add_command(self, name: str, fn: Callable, deps: tuple[str, ...] = ()):
+        return self.add(WorkflowNode(name, fn, deps, "command"))
+
+    def add_tony_job(self, name: str, client: TonYClient, job: JobSpec,
+                     ml_program: MLProgram, deps: tuple[str, ...] = ()):
+        """The TonY plugin: a distributed ML training node in the DAG."""
+
+        def run(ctx: dict[str, Any]):
+            result = client.run_and_wait(job, ml_program)
+            if not result.succeeded:
+                raise RuntimeError(f"tony job {job.name} failed "
+                                   f"after {len(result.attempts)} attempts")
+            return result
+
+        return self.add(WorkflowNode(name, run, deps, "tony"))
+
+    # ------------------------------------------------------------------
+    def _check_dag(self) -> list[str]:
+        order, seen, tmp = [], set(), set()
+
+        def visit(n: str):
+            if n in seen:
+                return
+            if n in tmp:
+                raise ValueError("workflow DAG has a cycle")
+            tmp.add(n)
+            for d in self.nodes[n].deps:
+                if d not in self.nodes:
+                    raise ValueError(f"unknown dependency {d!r} of {n!r}")
+                visit(d)
+            tmp.discard(n)
+            seen.add(n)
+            order.append(n)
+
+        for n in sorted(self.nodes):
+            visit(n)
+        return order
+
+    def execute(self, context: dict[str, Any] | None = None,
+                max_parallel: int = 8) -> dict[str, NodeResult]:
+        """Run ready nodes in parallel threads; failure skips dependents."""
+        self._check_dag()
+        context = context if context is not None else {}
+        results: dict[str, NodeResult] = {}
+        lock = threading.Lock()
+        done = threading.Condition(lock)
+        running: set[str] = set()
+
+        def ready(n: str) -> bool:
+            node = self.nodes[n]
+            return all(d in results and results[d].status == "SUCCEEDED"
+                       for d in node.deps)
+
+        def blocked_forever(n: str) -> bool:
+            return any(d in results and results[d].status != "SUCCEEDED"
+                       for d in self.nodes[n].deps)
+
+        def launch(n: str):
+            def body():
+                node = self.nodes[n]
+                try:
+                    value = node.run(context)
+                    res = NodeResult(n, "SUCCEEDED", value)
+                except Exception as e:  # noqa: BLE001
+                    res = NodeResult(n, "FAILED", error=f"{type(e).__name__}: {e}")
+                with lock:
+                    results[n] = res
+                    running.discard(n)
+                    done.notify_all()
+
+            threading.Thread(target=body, name=f"wf-{n}", daemon=True).start()
+
+        with lock:
+            while len(results) < len(self.nodes):
+                for n in sorted(self.nodes):
+                    if n in results or n in running:
+                        continue
+                    if blocked_forever(n):
+                        results[n] = NodeResult(n, "SKIPPED",
+                                                error="dependency failed")
+                        continue
+                    if ready(n) and len(running) < max_parallel:
+                        running.add(n)
+                        launch(n)
+                if len(results) < len(self.nodes):
+                    done.wait(0.05)
+        return results

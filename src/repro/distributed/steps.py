@@ -1,0 +1,209 @@
+"""Jitted distributed step builders: train / prefill / decode.
+
+Each builder returns (fn, in_shardings, out_shardings, arg_specs) so the
+launcher can either execute it (smoke scale) or ``.lower().compile()`` it
+against ShapeDtypeStructs (production dry-run).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as sh
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ----------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, T = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_media_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    elif cfg.uses_media:
+        specs["media"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_media_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def batch_shardings(cfg, shape, mesh, strategy) -> dict:
+    bspec = sh.batch_pspecs(mesh, shape.global_batch, strategy)
+    out = {"tokens": P(*bspec, None), "labels": P(*bspec, None)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = P(*bspec, None, None)
+    elif cfg.uses_media:
+        out["media"] = P(*bspec, None, None)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Train
+
+
+def make_train_fn(cfg: ModelConfig, mesh: Mesh, strategy: str = "fsdp_tp",
+                  opt: AdamWConfig | None = None, shape: ShapeConfig | None = None):
+    opt = opt or AdamWConfig()
+    p_specs = sh.param_pspecs(cfg, mesh, strategy)
+    state_pspecs = {
+        "params": p_specs,
+        "opt": {"m": p_specs, "v": p_specs, "count": P()},
+        "step": P(),
+    }
+
+    def train_step(state, batch):
+        k = max(cfg.microbatch, 1)
+        if k == 1:
+            def lf(params):
+                return M.loss_fn(cfg, params, batch)
+
+            (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        else:
+            # gradient accumulation: k sequential microbatches; activation
+            # residency /k at the cost of k-fold weight re-gathers (§Perf)
+            mb = jax.tree.map(
+                lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]), batch)
+
+            def micro(carry, one):
+                gsum, lsum = carry
+                (_, m), g = jax.value_and_grad(
+                    lambda p: M.loss_fn(cfg, p, one), has_aux=True)(state["params"])
+                return (jax.tree.map(jnp.add, gsum, g),
+                        jax.tree.map(jnp.add, lsum, m)), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            zeros_m = {"loss": 0.0, "ce": 0.0, "moe_aux": 0.0, "router_z": 0.0}
+            zeros_m = jax.tree.map(jnp.float32, zeros_m)
+            (grads, msum), _ = jax.lax.scan(micro, (zeros_g, zeros_m), mb)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            metrics = jax.tree.map(lambda m: m / k, msum)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"])
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    in_sh = (state_pspecs, None if shape is None else
+             batch_shardings(cfg, shape, mesh, strategy))
+    out_sh = (state_pspecs, P())
+
+    def to_named(t):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), t,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(to_named(state_pspecs),
+                      to_named(in_sh[1]) if in_sh[1] is not None else None),
+        out_shardings=(to_named(state_pspecs), None),
+        donate_argnums=(0,),
+    )
+    return jitted, state_pspecs
+
+
+def init_train_state(cfg: ModelConfig, rng: jax.Array) -> dict:
+    params = M.init_params(cfg, rng)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ModelConfig) -> dict:
+    params = M.abstract_params(cfg)
+    opt = {"m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+           "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+           "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ----------------------------------------------------------------------
+# Prefill (inference: full-sequence forward, next-token logits)
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Mesh, strategy: str = "fsdp_tp",
+                    shape: ShapeConfig | None = None):
+    p_specs = sh.param_pspecs(cfg, mesh, strategy)
+
+    def prefill(params, batch):
+        logits, _ = M.forward(cfg, params, batch)
+        return logits[:, -1:, :]
+
+    def to_named(t):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), t,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    bsh = None
+    if shape is not None:
+        bs = dict(batch_shardings(cfg, shape, mesh, strategy))
+        bs.pop("labels", None)
+        bsh = to_named(bs)
+    jitted = jax.jit(prefill, in_shardings=(to_named(p_specs), bsh))
+    return jitted, p_specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+# ----------------------------------------------------------------------
+# Decode (single new token against a seq_len KV cache)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract decode state via eval_shape (no allocation)."""
+    B, C = shape.global_batch, shape.seq_len
+    ab_params = M.abstract_params(cfg)
+    ctx = None
+    if cfg.uses_media:
+        ctx = jax.ShapeDtypeStruct((B, cfg.num_media_tokens, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+
+    def init(params, context):
+        return M.init_decode_state(cfg, params, B, C, context=context)
+
+    return jax.eval_shape(init, ab_params, ctx)
+
+
+def make_decode_fn(cfg: ModelConfig, mesh: Mesh, strategy: str = "fsdp_tp",
+                   shape: ShapeConfig | None = None):
+    assert shape is not None
+    B, C = shape.global_batch, shape.seq_len
+    p_specs = sh.param_pspecs(cfg, mesh, strategy)
+    st_shapes = decode_state_specs(cfg, shape)
+    st_specs = sh.state_pspecs(st_shapes, mesh, B, strategy)
+
+    def step(params, state, tokens):
+        return M.decode_step(cfg, params, state, tokens, C)
+
+    def to_named(t):
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), t,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    tok_sh = NamedSharding(mesh, P(*sh.batch_pspecs(mesh, B, strategy), None))
+    jitted = jax.jit(
+        step,
+        in_shardings=(to_named(p_specs), to_named(st_specs), tok_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, (p_specs, st_specs)
+
+
+def decode_token_specs(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+partial = partial  # noqa

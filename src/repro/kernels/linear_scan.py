@@ -1,0 +1,63 @@
+"""Chunked diagonal linear recurrence Pallas kernel: h_t = a_t*h_{t-1} + b_t.
+
+Serves RG-LRU (and any diagonal SSM). TPU adaptation: time is chunked along
+the sequential innermost grid dimension; the carry h lives in VMEM scratch and
+flows across chunks, so HBM traffic is exactly one read of (a, b) and one
+write of h — the memory-bound roofline for this op. Channels tile the lane
+dimension (128-aligned).
+
+Grid: (B, num_channel_tiles, num_time_chunks), time innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 128
+DEFAULT_BLOCK_C = 128
+
+
+def _scan_kernel(a_ref, b_ref, o_ref, h_scr, *, block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)   # (bt, bc)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(i, h):
+        h = a[i] * h + b[i]
+        o_ref[0, pl.dslice(i, 1), :] = h[None].astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, body, h_scr[0])
+    h_scr[0, :] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_c", "interpret"))
+def linear_scan(a, b, *, block_t: int = DEFAULT_BLOCK_T,
+                block_c: int = DEFAULT_BLOCK_C, interpret: bool = True):
+    """a, b: (B, T, C) -> h: (B, T, C)."""
+    B, T, C = a.shape
+    bt = min(block_t, T)
+    bc = min(block_c, C)
+    assert T % bt == 0 and C % bc == 0, (T, bt, C, bc)
+    kernel = functools.partial(_scan_kernel, block_t=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, C // bc, T // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bc), lambda bb, cc, tt: (bb, tt, cc)),
+            pl.BlockSpec((1, bt, bc), lambda bb, cc, tt: (bb, tt, cc)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bc), lambda bb, cc, tt: (bb, tt, cc)),
+        out_shape=jax.ShapeDtypeStruct((B, T, C), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

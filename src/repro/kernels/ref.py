@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (independent implementations —
+deliberately the naive O(T^2)/sequential forms)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,T,H,hd); k,v: (B,S,KV,hd); GQA by head grouping. f32 softmax."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, T, KV, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qf, kf) / jnp.sqrt(hd)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, vf)
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def linear_scan_ref(a, b, h0=None):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.
+    a, b: (B, T, C) -> h: (B, T, C), computed sequentially in f32."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    B, T, C = a.shape
+    h = jnp.zeros((B, C), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (af.transpose(1, 0, 2), bf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(a.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def wkv_ref(r, k, v, log_w, u):
+    """RWKV-6 WKV. r,k,v,log_w: (B,T,H,K); u: (H,K) -> (B,T,H,K), f32 state."""
+    B, T, H, K = r.shape
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S, ins):
+        rt, kt, vt, lwt = ins
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., :, None] * kv)
+        S = jnp.exp(lwt)[..., :, None] * S + kv
+        return S, y
+
+    tr = lambda x: x.astype(jnp.float32).transpose(1, 0, 2, 3)  # noqa: E731
+    _, ys = jax.lax.scan(step, S0, (tr(r), tr(k), tr(v), tr(log_w)))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)

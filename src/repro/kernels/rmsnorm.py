@@ -1,0 +1,42 @@
+"""Fused RMSNorm Pallas kernel (reduce + rsqrt + scale in one VMEM pass)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + s_ref[...].astype(jnp.float32))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+    """x: (N, d); scale: (d,)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    N = x2.shape[0]
+    br = min(block_rows, N)
+    assert N % br == 0, (N, br)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(N // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

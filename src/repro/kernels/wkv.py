@@ -1,0 +1,73 @@
+"""RWKV-6 WKV Pallas kernel: matrix-valued per-head state with
+data-dependent per-channel decay.
+
+    S_t = diag(exp(log_w_t)) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+TPU adaptation: one (K x K) f32 state tile per (batch, head) lives in VMEM
+scratch and persists across the sequential time-chunk grid dimension; the
+rank-1 update k^T v and the r-contraction both map onto the MXU as (K x K)
+outer/inner products. K = 64 for the assigned rwkv6-3b (pad to 128 lanes on
+real hardware; interpret mode is exact).
+
+Grid: (B, H, num_time_chunks), time innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 64
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *,
+                block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)     # (bt, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)           # (K,)
+
+    def body(i, S):
+        kv = k[i][:, None] * v[i][None, :]        # (K, K) rank-1
+        y = (r[i][:, None] * (S + u[:, None] * kv)).sum(axis=0)
+        o_ref[0, pl.dslice(i, 1), 0, :] = y[None].astype(o_ref.dtype)
+        return jnp.exp(lw[i])[:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, block_t, body, s_scr[...])
+    s_scr[...] = S
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv(r, k, v, log_w, u, *, block_t: int = DEFAULT_BLOCK_T,
+        interpret: bool = True):
+    """r,k,v,log_w: (B,T,H,K); u: (H,K) -> y: (B,T,H,K)."""
+    B, T, H, K = r.shape
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    kernel = functools.partial(_wkv_kernel, block_t=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, T // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, 1, K), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bt, 1, K), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bt, 1, K), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bt, 1, K), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, K), lambda b, h, t: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, 1, K), lambda b, h, t: (b, t, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, K), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u)

@@ -1,0 +1,94 @@
+"""Run the full baseline dry-run matrix as subprocesses (fresh XLA state per
+run) and collect JSON results under experiments/dryrun/.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--only-mode compile]
+      [--outdir experiments/dryrun] [--timeout 1800]
+
+Matrix: 10 assigned archs x 4 shapes x {compile@16x16, compile@2x16x16,
+analysis@16x16}, skips per DESIGN.md recorded as JSON too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+MATRIX_ARCHS = [a for a in ARCH_IDS if a != "tony-paper-mlp"]
+
+
+def planned_runs(only_mode: str | None = None) -> list[dict]:
+    order = sorted(MATRIX_ARCHS, key=lambda a: get_config(a).param_count())
+    runs = []
+    for arch in order:
+        for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+            for mode, multi in [("compile", False), ("compile", True),
+                                ("analysis", False)]:
+                if only_mode and mode != only_mode:
+                    continue
+                runs.append({"arch": arch, "shape": shape, "mode": mode,
+                             "multi_pod": multi})
+    return runs
+
+
+def run_name(r: dict) -> str:
+    mesh = "2x16x16" if r["multi_pod"] else "16x16"
+    return f"{r['arch']}__{r['shape']}__{mesh}__{r['mode']}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--only-mode", default="")
+    ap.add_argument("--strategy", default="fsdp_tp")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    runs = planned_runs(args.only_mode or None)
+    t_start = time.time()
+    done = 0
+    for r in runs:
+        name = run_name(r)
+        out = os.path.join(args.outdir, name + ".json")
+        if os.path.exists(out):
+            done += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", r["arch"], "--shape", r["shape"],
+               "--mode", r["mode"], "--strategy", args.strategy,
+               "--out", out]
+        if r["multi_pod"]:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=args.timeout)
+            ok = proc.returncode == 0 and os.path.exists(out)
+            if not ok:
+                with open(out, "w") as f:
+                    json.dump({"arch": r["arch"], "shape": r["shape"],
+                               "mode": r["mode"],
+                               "mesh": "2x16x16" if r["multi_pod"] else "16x16",
+                               "ok": False,
+                               "error": f"rc={proc.returncode}",
+                               "stderr": proc.stderr[-3000:]}, f, indent=2)
+        except subprocess.TimeoutExpired:
+            with open(out, "w") as f:
+                json.dump({"arch": r["arch"], "shape": r["shape"],
+                           "mode": r["mode"],
+                           "mesh": "2x16x16" if r["multi_pod"] else "16x16",
+                           "ok": False, "error": "timeout"}, f, indent=2)
+        done += 1
+        status = json.load(open(out)).get("ok")
+        print(f"[{done}/{len(runs)}] {name}: ok={status} "
+              f"({time.time()-t0:.0f}s, total {time.time()-t_start:.0f}s)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""The ML programs TonY spawns as child processes.
+
+``make_train_program`` builds a TonY-compatible callable that runs a real JAX
+training loop (model/optimizer/data/checkpointing from this repo) under
+whatever cluster spec the AM hands it.
+
+Single-process adaptation (DESIGN.md §2): the chief worker drives the
+jit-compiled SPMD step over the full local mesh; other tasks execute the
+launch/rendezvous/heartbeat protocol and wait — in a real multi-host
+deployment every rank would call ``jax.distributed.initialize`` and drive the
+same program.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.core.task_executor import JobContext
+from repro.data import make_dataset
+from repro.distributed.steps import init_train_state, make_train_fn
+from repro.optim import AdamWConfig
+
+
+def _local_mesh(strategy: str):
+    devs = np.array(jax.devices())
+    n = len(devs)
+    # split devices into (data, model); prefer square-ish
+    model = 1
+    for m in (8, 4, 2, 1):
+        if n % m == 0 and m <= n:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
+                       seq_len: int, ckpt_dir: str, ckpt_every: int = 10,
+                       strategy: str = "fsdp_tp",
+                       lr: float = 1e-3,
+                       data_kind: str = "synthetic",
+                       data_path: str | None = None,
+                       data_seed: int = 0,
+                       fail_at: tuple[int, int] | None = None,
+                       on_step: Callable[[int, dict], None] | None = None):
+    """Returns an MLProgram. ``fail_at=(attempt, step)`` injects a crash in
+    the chief worker at that (attempt, step) — the fault-tolerance tests and
+    benchmarks use it to exercise the AM relaunch path."""
+
+    def program(env: dict[str, str], ctx: JobContext) -> int:
+        task_type = env["TASK_TYPE"]
+        index = int(env["TASK_INDEX"])
+        task_id = f"{task_type}:{index}"
+        spec = json.loads(env["CLUSTER_SPEC"])
+        attempt = int(ctx.shared.get("attempt", 1))
+
+        if not ctx.rendezvous(timeout=60.0):
+            return 3  # cancelled before the job formed
+
+        worker_types = [t for t in ("worker", "chief") if t in spec]
+        chief_type = worker_types[0] if worker_types else sorted(spec)[0]
+        is_chief = task_type == chief_type and index == 0
+
+        rc = 0
+        if is_chief:
+            rc = _chief_train_loop(env, ctx, attempt, task_id)
+        else:
+            # non-chief: stay alive for the duration of the job ("the ML
+            # framework's distributed protocol" is collapsed into-process)
+            while not ctx.cancel.is_set() and not ctx.shared.get("train_done"):
+                time.sleep(0.005)
+            ctx.shared[f"metrics:{task_id}"] = {
+                "peak_memory_mb": 64.0, "role": 0.0}
+        ctx.shared["train_done"] = True
+        ctx.rendezvous(timeout=30.0)
+        return rc
+
+    def _chief_train_loop(env, ctx: JobContext, attempt: int, task_id: str) -> int:
+        mesh = _local_mesh(strategy)
+        t_start = time.monotonic()
+        data = make_dataset(data_kind, batch_size, seq_len, cfg.vocab_size,
+                            path=data_path, seed=data_seed)
+        ckpt = Checkpointer(ckpt_dir)
+        with jax.set_mesh(mesh):
+            train_fn, _ = make_train_fn(
+                cfg, mesh, strategy, opt=AdamWConfig(lr=lr, weight_decay=0.0))
+            state = init_train_state(cfg, jax.random.PRNGKey(0))
+            start = 0
+            last = ckpt.latest_step()
+            if last is not None:
+                state = ckpt.restore(state, last)
+                data.load_state_dict({"step": last})
+                start = int(last)
+                ctx.shared.setdefault("restarts", []).append(
+                    {"attempt": attempt, "restored_step": start})
+
+            losses = ctx.shared.setdefault("loss_history", [])
+            for step in range(start, steps):
+                if ctx.cancel.is_set():
+                    return 143
+                if fail_at is not None and (attempt, step) == fail_at:
+                    raise RuntimeError(
+                        f"injected transient failure at attempt={attempt} step={step}")
+                batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+                state, metrics = train_fn(state, batch)
+                loss = float(metrics["loss"])
+                losses.append((step, loss))
+                if on_step:
+                    on_step(step, {k: float(v) for k, v in metrics.items()})
+                if (step + 1) % ckpt_every == 0 or step + 1 == steps:
+                    ckpt.save(jax.tree.map(np.asarray, state), step + 1)
+                    data.step = step + 1
+            ctx.shared[f"metrics:{task_id}"] = {
+                "peak_memory_mb": float(
+                    sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))
+                    / 1e6),
+                "steps": float(steps),
+                "final_loss": losses[-1][1] if losses else float("nan"),
+                "train_seconds": time.monotonic() - t_start,
+            }
+        return 0
+
+    return program

@@ -1,0 +1,48 @@
+"""TonY client CLI: submit a job described by a tony.xml file.
+
+  PYTHONPATH=src python -m repro.launch.submit --xml job.xml \
+      [--arch qwen3-1.7b --smoke --steps 20]
+
+The XML's task types/resources drive the cluster negotiation; --arch picks
+the ML program the executors spawn.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import TonYClient, YarnLikeBackend, make_cluster, parse_tony_xml
+from repro.launch.programs import make_train_program
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--xml", required=True)
+    ap.add_argument("--arch", default="tony-paper-mlp", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    args = ap.parse_args()
+
+    job = parse_tony_xml(args.xml)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=2, gpus_per_node=4)
+    client = TonYClient(YarnLikeBackend(rm))
+    prog = make_train_program(cfg, steps=args.steps, batch_size=args.batch_size,
+                              seq_len=args.seq_len,
+                              ckpt_dir=tempfile.mkdtemp(prefix="tony-submit-"))
+    result = client.run_and_wait(job, prog)
+    print(json.dumps({
+        "app_id": result.app_id,
+        "status": result.final_status,
+        "attempts": len(result.attempts),
+        "ui_url": result.ui_url,
+        "task_logs": sorted(result.task_logs),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Training driver: submits a distributed training job through the full TonY
+path (client -> RM -> AM -> executors -> JAX train loop).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 50 --batch-size 8 --seq-len 64 [--workers 2 --ps 1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import (
+    JobHistoryServer,
+    MetricsAnalyzer,
+    TonYClient,
+    YarnLikeBackend,
+    job_spec_from_props,
+    make_cluster,
+)
+from repro.launch.programs import make_train_program
+
+
+def build_job(name: str, workers: int, ps: int, gpus_per_worker: int = 1):
+    props = {
+        "tony.application.name": name,
+        "tony.worker.instances": str(workers),
+        "tony.worker.memory": "8192",
+        "tony.worker.vcores": "4",
+        "tony.worker.gpus": str(gpus_per_worker),
+        "tony.worker.node-label": "gpu",
+    }
+    if ps > 0:
+        props.update({
+            "tony.ps.instances": str(ps),
+            "tony.ps.memory": "4096",
+            "tony.ps.vcores": "2",
+            "tony.ps.node-label": "highmem",
+        })
+    return job_spec_from_props(props)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tony-paper-mlp", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--ps", type=int, default=1)
+    ap.add_argument("--strategy", default="fsdp_tp")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="tony-train-")
+
+    rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=2, gpus_per_node=4)
+    client = TonYClient(YarnLikeBackend(rm))
+    job = build_job(f"train-{cfg.name}", args.workers, args.ps)
+
+    steps_log = []
+    prog = make_train_program(
+        cfg, steps=args.steps, batch_size=args.batch_size, seq_len=args.seq_len,
+        ckpt_dir=os.path.join(ckpt_dir, "ckpt"), ckpt_every=args.ckpt_every,
+        strategy=args.strategy, lr=args.lr,
+        on_step=lambda s, m: steps_log.append((s, m["loss"])))
+
+    result = client.run_and_wait(job, prog)
+    history = JobHistoryServer()
+    history.record(job, result)
+    print(json.dumps({
+        "status": result.final_status,
+        "attempts": len(result.attempts),
+        "ui_url": result.ui_url,
+        "first_loss": steps_log[0][1] if steps_log else None,
+        "final_loss": steps_log[-1][1] if steps_log else None,
+        "suggestions": [s.message for s in MetricsAnalyzer().analyze(job, result)],
+        "ckpt_dir": ckpt_dir,
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    logical_axes,
+    loss_fn,
+)

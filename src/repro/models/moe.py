@@ -1,0 +1,123 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-limited einsum
+dispatch/combine (the classic TPU-native Mesh-TF/GLaM formulation), plus a
+weight-gather path for tiny decode batches (N < E).
+
+Sharding intent: token groups shard over the data axes, experts shard over the
+model axis — GSPMD inserts the all-to-all between token- and expert-major
+layouts, which is exactly the MoE collective the roofline tracks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PSpec, constrain
+
+
+
+
+def moe_specs(cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": PSpec((d, E), ("embed", "experts"), fan_in=d),
+        "w_gate": PSpec((E, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "w_up": PSpec((E, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "w_down": PSpec((E, f, d), ("experts", "mlp", "embed"), fan_in=f),
+    }
+    if cfg.shared_expert:
+        p["shared"] = {
+            "wi_gate": PSpec((d, f), ("embed", "mlp")),
+            "wi_up": PSpec((d, f), ("embed", "mlp")),
+            "wo": PSpec((f, d), ("mlp", "embed")),
+        }
+    return p
+
+
+def _expert_ffn(w, h):
+    """h: (..., c, d) grouped expert inputs with leading expert dim e."""
+    gate = jnp.einsum("gecd,edf->gecf", h, w["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", h, w["w_up"])
+    return jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, w["w_down"])
+
+
+def apply_moe(cfg, p: dict, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x: (B, T, d) -> (out, aux) with load-balance + router-z aux losses."""
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    N = B * T
+    flat = x.reshape(N, d)
+
+    logits = flat.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (N, E)
+
+    if N < E:
+        out = _decode_gather(cfg, p, flat, probs)
+        aux = {"moe_aux": jnp.zeros((), jnp.float32), "router_z": jnp.zeros((), jnp.float32)}
+    else:
+        out, aux = _einsum_dispatch(cfg, p, flat, probs, logits)
+
+    if cfg.shared_expert:
+        s = p["shared"]
+        shared = (jax.nn.silu(flat @ s["wi_gate"]) * (flat @ s["wi_up"])) @ s["wo"]
+        out = out + shared
+    return out.reshape(B, T, d), aux
+
+
+def _einsum_dispatch(cfg, p, flat, probs, logits):
+    N, d = flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    g = min(cfg.moe_group_size, N)
+    while N % g:
+        g //= 2
+    G, S = N // g, g
+    cap = max(1, int(S / E * cfg.capacity_factor * k))
+
+    probs_g = probs.reshape(G, S, E)
+    xg = flat.reshape(G, S, d)
+
+    # top-k (k=1 for the assigned archs, general code kept for k>1)
+    combine = jnp.zeros((G, S, E, cap), jnp.float32)
+    gates_left = probs_g
+    position_base = jnp.zeros((G, E), jnp.int32)
+    aux_frac = jnp.zeros((G, E), jnp.float32)
+    for _ in range(k):
+        gate, idx = jax.lax.top_k(gates_left, 1)           # (G,S,1)
+        gate, idx = gate[..., 0], idx[..., 0]              # (G,S)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G,S,E)
+        aux_frac = aux_frac + onehot.mean(axis=1)
+        # position of each token within its expert queue
+        pos_in_e = (jnp.cumsum(onehot, axis=1) - onehot) + position_base[:, None, :]
+        pos = jnp.einsum("gse,gse->gs", pos_in_e, onehot)  # (G,S)
+        keep = pos < cap
+        poh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (G,S,cap)
+        combine = combine + (gate * keep)[..., None, None] * onehot[..., None] * poh[:, :, None, :]
+        position_base = position_base + onehot.sum(axis=1).astype(jnp.int32)
+        gates_left = gates_left * (1.0 - onehot)
+    dispatch = (combine > 0).astype(flat.dtype)            # (G,S,E,cap)
+
+    h = jnp.einsum("gsec,gsd->gecd", dispatch, xg)          # all-to-all boundary
+    h = constrain(h, "batch", "model", None, None)          # expert-parallel
+    y = _expert_ffn(p, h.astype(flat.dtype))
+    y = constrain(y, "batch", "model", None, None)
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(flat.dtype), y)
+
+    # Switch-style load balance: E * mean_e(frac_tokens_e * mean_prob_e)
+    mean_prob = probs_g.mean(axis=1)                        # (G,E)
+    lb = E * jnp.mean(jnp.sum((aux_frac / k) * mean_prob, axis=-1))
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out.reshape(N, d), {"moe_aux": lb, "router_z": zl}
+
+
+def _decode_gather(cfg, p, flat, probs):
+    """Tiny-batch decode: gather the selected expert's weights per token.
+    FLOPs = active params only; bytes = gathered weights (the real
+    weight-movement cost of small-batch MoE serving)."""
+    N, d = flat.shape
+    idx = jnp.argmax(probs, axis=-1)                        # (N,) top-1
+    gate = jnp.max(probs, axis=-1)
+    wg = jnp.take(p["w_gate"], idx, axis=0)                 # (N, d, f)
+    wu = jnp.take(p["w_up"], idx, axis=0)
+    wd = jnp.take(p["w_down"], idx, axis=0)
+    h = jax.nn.silu(jnp.einsum("nd,ndf->nf", flat, wg)) * jnp.einsum("nd,ndf->nf", flat, wu)
+    out = jnp.einsum("nf,nfd->nd", h, wd)
+    return out * gate[:, None].astype(out.dtype)

@@ -1,0 +1,222 @@
+"""Recurrent mixers.
+
+RG-LRU (Griffin / RecurrentGemma): diagonal gated linear recurrence, computed
+with ``jax.lax.associative_scan`` over time — the TPU-native adaptation of the
+GPU sequential kernel (log-depth, MXU-free elementwise work).
+
+RWKV-6 (Finch): matrix-valued per-head WKV state with data-dependent decay,
+computed with an exact sequential ``lax.scan`` in the reference path (compact
+HLO; the Pallas ``wkv`` kernel is the TPU perf path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    PSpec,
+    causal_conv1d,
+    conv1d_decode,
+    group_norm_heads,
+    token_shift,
+)
+
+RGLRU_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+# ----------------------------------------------------------------------
+# RG-LRU block
+
+
+def rglru_specs(cfg) -> dict:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    cw = cfg.conv1d_width
+    return {
+        "w_x": PSpec((d, w), ("embed", "lru")),
+        "w_gate": PSpec((d, w), ("embed", "lru")),
+        "conv_w": PSpec((cw, w), ("conv", "lru"), fan_in=cw),
+        "conv_b": PSpec((w,), ("lru",), init="zeros"),
+        "gate_a": PSpec((w, w), ("lru", "lru")),
+        "gate_a_b": PSpec((w,), ("lru",), init="zeros"),
+        "gate_x": PSpec((w, w), ("lru", "lru")),
+        "gate_x_b": PSpec((w,), ("lru",), init="zeros"),
+        "log_lambda": PSpec((w,), ("lru",), init="lru_lambda"),
+        "w_out": PSpec((w, d), ("lru", "embed")),
+    }
+
+
+def _rglru_coeffs(p, x):
+    """Per-step recurrence coefficients. x: (..., w) post-conv branch.
+    Returns (a, b) with h_t = a_t * h_{t-1} + b_t, computed in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["gate_a"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["gate_x"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["log_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (Griffin eq. 4), stable form
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * xf)
+    return a, b
+
+
+def rglru_scan(p, x, use_pallas: bool = False):
+    """Scan over time. x: (B, T, w) -> h: (B, T, w) (f32).
+
+    Reference path: associative_scan (log-depth, TPU-native). Pallas path:
+    the chunked ``linear_scan`` kernel."""
+    a, b = _rglru_coeffs(p, x)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.linear_scan(a, b)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_cum
+    return h
+
+
+def apply_rglru(cfg, p, x):
+    """Full Griffin recurrent block. x: (B, T, d) -> (B, T, d)."""
+    from repro.models.layers import constrain
+    branch = constrain(x @ p["w_x"], "batch", None, "model")
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    branch = causal_conv1d(branch, p["conv_w"], p["conv_b"])
+    h = rglru_scan(p, branch, use_pallas=cfg.use_pallas).astype(x.dtype)
+    return (h * gate) @ p["w_out"]
+
+
+def rglru_init_state(cfg, batch: int) -> dict:
+    w, cw = cfg.resolved_lru_width, cfg.conv1d_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, w), jnp.float32),
+    }
+
+
+def decode_rglru(cfg, p, x_t, state):
+    """One-step decode. x_t: (B, 1, d) -> (out (B,1,d), new_state)."""
+    xt = x_t[:, 0, :]
+    branch = xt @ p["w_x"]
+    gate = jax.nn.gelu(xt @ p["w_gate"])
+    branch, conv_state = conv1d_decode(
+        branch.astype(jnp.float32), state["conv"], p["conv_w"].astype(jnp.float32),
+        p["conv_b"].astype(jnp.float32))
+    a, b = _rglru_coeffs(p, branch)
+    h = a * state["h"] + b
+    out = ((h.astype(xt.dtype) * gate) @ p["w_out"])[:, None, :]
+    return out, {"h": h, "conv": conv_state}
+
+
+# ----------------------------------------------------------------------
+# RWKV-6 time-mix
+
+
+def rwkv_specs(cfg) -> dict:
+    d = cfg.d_model
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "mu_r": PSpec((d,), ("embed",), init="ones"),
+        "mu_k": PSpec((d,), ("embed",), init="ones"),
+        "mu_v": PSpec((d,), ("embed",), init="ones"),
+        "mu_w": PSpec((d,), ("embed",), init="ones"),
+        "mu_g": PSpec((d,), ("embed",), init="ones"),
+        "w_r": PSpec((d, d), ("embed", "rwkv_out")),
+        "w_k": PSpec((d, d), ("embed", "rwkv_out")),
+        "w_v": PSpec((d, d), ("embed", "rwkv_out")),
+        "w_g": PSpec((d, d), ("embed", "rwkv_out")),
+        "w_decay": PSpec((d, d), ("embed", "rwkv_out")),   # data-dependent decay proj
+        "decay_base": PSpec((H, K), ("heads", "head_dim"), init="zeros"),
+        "u_bonus": PSpec((H, K), ("heads", "head_dim"), init="zeros"),
+        "ln_scale": PSpec((H, K), ("heads", "head_dim"), init="ones"),
+        "ln_bias": PSpec((H, K), ("heads", "head_dim"), init="zeros"),
+        "w_out": PSpec((d, d), ("rwkv_out", "embed")),
+    }
+
+
+def _rwkv_proj(cfg, p, x, shifted):
+    """Token-shift lerps + projections -> r,k,v,g,(log)w heads."""
+    B, T, d = x.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    def lerp(mu):
+        return x + (shifted - x) * mu
+
+    from repro.models.layers import constrain_any as _ca
+    r = _ca((lerp(p["mu_r"]) @ p["w_r"]).reshape(B, T, H, K),
+            ("batch", None, "model", None), ("batch", None, None, "model"))
+    k = _ca((lerp(p["mu_k"]) @ p["w_k"]).reshape(B, T, H, K),
+            ("batch", None, "model", None), ("batch", None, None, "model"))
+    v = _ca((lerp(p["mu_v"]) @ p["w_v"]).reshape(B, T, H, K),
+            ("batch", None, "model", None), ("batch", None, None, "model"))
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+    # Finch: per-channel decay w_t = exp(-exp(base + f(x_t))), in f32
+    dd = (lerp(p["mu_w"]) @ p["w_decay"]).reshape(B, T, H, K).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32) + jnp.tanh(dd), -8.0, 4.0))
+    return r, k, v, g, log_w
+
+
+def _wkv_step(state, inputs, u):
+    """state: (B,H,K,K) f32; r,k,v: (B,H,K); log_w: (B,H,K)."""
+    r, k, v, log_w = inputs
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]              # (B,H,K,K)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state + u[..., :, None] * kv)
+    new_state = jnp.exp(log_w)[..., :, None] * state + kv
+    return new_state, y
+
+
+def apply_rwkv(cfg, p, x, *, return_state=False, init_state=None):
+    """Full-sequence RWKV-6 time-mix. x: (B,T,d)."""
+    B, T, d = x.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    shifted = token_shift(x)
+    r, k, v, g, log_w = _rwkv_proj(cfg, p, x, shifted)
+    u = p["u_bonus"].astype(jnp.float32)
+
+    S0 = init_state if init_state is not None else jnp.zeros((B, H, K, K), jnp.float32)
+
+    if cfg.use_pallas and init_state is None and not return_state:
+        from repro.kernels import ops as kops
+        y = kops.wkv(r, k, v, log_w.astype(r.dtype), p["u_bonus"].astype(r.dtype))
+    else:
+        def body(state, ins):
+            return _wkv_step(state, ins, u)
+
+        xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), log_w.transpose(1, 0, 2, 3))
+        S, ys = jax.lax.scan(body, S0, xs)
+        y = ys.transpose(1, 0, 2, 3)                       # (B,T,H,K)
+    y = group_norm_heads(y, p["ln_scale"], p["ln_bias"], cfg.norm_eps)
+    out = (y.reshape(B, T, d).astype(x.dtype) * g) @ p["w_out"]
+    if return_state:
+        return out, S
+    return out
+
+
+def rwkv_init_state(cfg, batch: int) -> dict:
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "S": jnp.zeros((batch, H, K, K), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def decode_rwkv(cfg, p, x_t, state):
+    """One-step decode. x_t: (B,1,d)."""
+    B, _, d = x_t.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    shifted = token_shift(x_t, state["x_prev"].astype(x_t.dtype))
+    r, k, v, g, log_w = _rwkv_proj(cfg, p, x_t, shifted)
+    u = p["u_bonus"].astype(jnp.float32)
+    S, y = _wkv_step(state["S"], (r[:, 0], k[:, 0], v[:, 0], log_w[:, 0]), u)
+    y = group_norm_heads(y[:, None], p["ln_scale"], p["ln_bias"], cfg.norm_eps)
+    out = (y.reshape(B, 1, d).astype(x_t.dtype) * g) @ p["w_out"]
+    return out, {"S": S, "x_prev": x_t[:, 0, :].astype(jnp.float32)}
+
+
+def cmix_init_state(cfg, batch: int) -> jax.Array:
+    return jnp.zeros((batch, cfg.d_model), jnp.float32)

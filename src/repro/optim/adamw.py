@@ -1,0 +1,61 @@
+"""AdamW as a pure pytree transform (no external deps).
+
+Moments live in f32 and share the parameter sharding (same pytree
+structure), so the optimizer states shard identically to params under the
+dry-run meshes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)  # noqa: E731
+    return {"m": zeros(params), "v": zeros(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    lr = cfg.lr(count) if callable(cfg.lr) else cfg.lr
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * jnp.square(g),
+                     state["v"], grads)
+
+    def upd(p, mm, vv):
+        step = lr * (mm / b1c) / (jnp.sqrt(vv / b2c) + cfg.eps)
+        if cfg.weight_decay > 0:
+            step = step + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}, {"grad_norm": gnorm}

@@ -1,0 +1,113 @@
+"""Unit tests for the dry-run / roofline machinery (pure functions — the
+512-device lowering itself is covered by the matrix artifacts)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun_lib import (
+    _extrapolate,
+    model_flops,
+    parse_collective_bytes,
+    rwkv_correction_flops,
+    should_skip,
+)
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,1024,128]{2,1,0} all-gather(%p0), replica_groups={...}
+  %ar.1 = f32[256,4096]{1,0} all-reduce(%x), to_apply=%add
+  %rs = (f32[64,64]{1,0}, f32[64,64]{1,0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = bf16[8,128,64]{2,1,0} all-to-all(%y), dimensions={0}
+  %cp-start = bf16[2,2]{1,0} collective-permute-start(%z), source_target_pairs={{0,1}}
+  %done = bf16[2,2]{1,0} collective-permute-done(%cp-start)
+  %not_a_collective = f32[4]{0} add(%c, %d)
+}
+"""
+
+
+def test_parse_collective_bytes_kinds_and_sizes():
+    out = parse_collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 1024 * 128 * 2
+    assert out["all-reduce"] == 256 * 4096 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 64 * 4   # tuple result summed
+    assert out["all-to-all"] == 8 * 128 * 64 * 2
+    assert out["collective-permute"] == 2 * 2 * 2     # -start counted, -done not
+    assert out["count"] == 5
+
+
+def test_extrapolation_linear():
+    e1 = {"flops": 10.0, "bytes_accessed": 100.0,
+          "collectives": {k: 1.0 for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute")} | {"count": 3},
+          "memory": None}
+    e2 = {"flops": 18.0, "bytes_accessed": 160.0,
+          "collectives": {k: 1.5 for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute")} | {"count": 3},
+          "memory": None}
+    ext = _extrapolate(e1, e2, reps=10.0)
+    # fixed = a - marg = 2; total = 2 + 10*8 = 82
+    assert ext["flops"] == pytest.approx(82.0)
+    assert ext["bytes_accessed"] == pytest.approx(40.0 + 10 * 60.0)
+    assert ext["collectives"]["all-gather"] == pytest.approx(0.5 + 10 * 0.5)
+
+
+def test_extrapolation_negative_marginal_fallback():
+    base = {"collectives": {k: 0.0 for k in
+                            ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute")} | {"count": 0},
+            "memory": None}
+    e1 = {**base, "flops": 10.0, "bytes_accessed": 120.0}
+    e2 = {**base, "flops": 18.0, "bytes_accessed": 100.0}  # fusion noise
+    ext = _extrapolate(e1, e2, reps=8.0)
+    assert ext["bytes_accessed"] == pytest.approx(100.0 * 8.0 / 2.0)  # proportional
+    assert ext["flops"] == pytest.approx(2.0 + 8 * 8.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen3-1.7b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6.0 * n * 256 * 4096)
+    assert de == pytest.approx(2.0 * n * 128)
+
+
+def test_moe_active_params_much_smaller_than_total():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert cfg.active_param_count() < cfg.param_count() / 5
+    dense = get_config("llama3-405b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_rwkv_correction_only_for_ssm():
+    assert rwkv_correction_flops(get_config("qwen3-1.7b"),
+                                 INPUT_SHAPES["train_4k"]) == 0.0
+    c = rwkv_correction_flops(get_config("rwkv6-3b"), INPUT_SHAPES["train_4k"])
+    cfg = get_config("rwkv6-3b")
+    want = 6.0 * cfg.rwkv_heads * 64 * 64 * 32 * 256 * 4096 * 3
+    assert c == pytest.approx(want)
+
+
+def test_should_skip_matrix():
+    assert should_skip(get_config("whisper-base"), INPUT_SHAPES["long_500k"])
+    assert should_skip(get_config("whisper-base"), INPUT_SHAPES["decode_32k"]) is None
+    for a in ("rwkv6-3b", "recurrentgemma-2b", "llama3-405b"):
+        assert should_skip(get_config(a), INPUT_SHAPES["long_500k"]) is None
+
+
+def test_param_counts_match_public_scale():
+    """Sanity: assigned configs land near their nameplate sizes."""
+    approx = {
+        "llama3-405b": 405e9,
+        "deepseek-coder-33b": 33e9,
+        "qwen3-1.7b": 2e9,
+        "llama3.2-3b": 3.2e9,
+        "rwkv6-3b": 3.1e9,
+        "recurrentgemma-2b": 2.7e9,
+        "llama4-maverick-400b-a17b": 400e9,
+    }
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.5 * want < got < 1.6 * want, (arch, got, want)

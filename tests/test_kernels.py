@@ -1,0 +1,99 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,KV,hd,causal,window", [
+    (1, 128, 4, 4, 64, True, 0),      # MHA causal
+    (2, 256, 4, 2, 64, True, 0),      # GQA
+    (1, 128, 8, 1, 32, True, 0),      # MQA
+    (1, 256, 4, 4, 64, True, 64),     # sliding window
+    (2, 128, 2, 2, 128, False, 0),    # bidirectional (encoder)
+    (1, 512, 2, 1, 64, True, 128),    # long + window + MQA
+])
+def test_flash_attention_sweep(B, T, H, KV, hd, causal, window, dtype, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert out.shape == want.shape
+    assert jnp.max(jnp.abs(out.astype(jnp.float32) - want.astype(jnp.float32))) < _tol(dtype) * 3
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(block_q, block_k, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=block_q,
+                              block_k=block_k)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    assert jnp.max(jnp.abs(out - want)) < 1e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,C,bt,bc", [
+    (1, 128, 128, 128, 128),
+    (2, 256, 256, 64, 128),
+    (1, 64, 512, 32, 128),
+    (3, 96, 64, 32, 64),
+])
+def test_linear_scan_sweep(B, T, C, bt, bc, dtype, rng):
+    ks = jax.random.split(rng, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, C))).astype(dtype)
+    b = jax.random.normal(ks[1], (B, T, C), dtype)
+    out = ops.linear_scan(a, b, block_t=bt, block_c=bc)
+    want = ref.linear_scan_ref(a, b)
+    assert jnp.max(jnp.abs(out.astype(jnp.float32) - want.astype(jnp.float32))) < _tol(dtype) * 5
+
+
+@pytest.mark.parametrize("B,T,H,K,bt", [
+    (1, 64, 2, 32, 64),
+    (2, 128, 4, 64, 32),
+    (1, 96, 3, 32, 32),
+])
+def test_wkv_sweep(B, T, H, K, bt, rng):
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) * 0.3)
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    out = ops.wkv(r, k, v, lw, u, block_t=bt)
+    want = ref.wkv_ref(r, k, v, lw, u)
+    assert jnp.max(jnp.abs(out - want)) < 1e-4
+
+
+@pytest.mark.parametrize("shape", [(128, 256), (256, 512), (2, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype, rng):
+    ks = jax.random.split(rng, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    s = jax.random.normal(ks[1], (shape[-1],), jnp.float32) * 0.1
+    out = ops.rmsnorm(x, s)
+    want = ref.rmsnorm_ref(x, s)
+    assert jnp.max(jnp.abs(out.astype(jnp.float32) - want.astype(jnp.float32))) < _tol(dtype)
+
+
+def test_flash_attention_grad_matches_ref(rng):
+    """The kernel is used in training too: check VJP against the oracle."""
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+
+    g1 = jax.grad(lambda q: ops.flash_attention(q, k, v, causal=True).sum())(q)
+    g2 = jax.grad(lambda q: ref.flash_attention_ref(q, k, v, causal=True).sum())(q)
+    assert jnp.max(jnp.abs(g1 - g2)) < 1e-4

@@ -1,0 +1,373 @@
+"""TonY orchestrator unit + integration tests: RM scheduling, XML config,
+client/AM lifecycle, fault tolerance, workflow DAG, history/metrics."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AllocationError,
+    ContainerRequest,
+    JobHistoryServer,
+    JobSpec,
+    MetricsAnalyzer,
+    Node,
+    Resource,
+    ResourceManager,
+    TaskSpec,
+    TonYClient,
+    Workflow,
+    YarnLikeBackend,
+    build_cluster_spec,
+    job_spec_from_props,
+    make_cluster,
+    parse_tony_xml,
+    task_env,
+    to_tony_xml,
+)
+from repro.core.cluster_spec import TaskAddress
+
+
+# ----------------------------------------------------------------------
+# ResourceManager
+
+
+def test_rm_allocates_on_labelled_nodes():
+    rm = make_cluster(num_gpu_nodes=1, num_cpu_nodes=1, gpus_per_node=4)
+    app = rm.submit_application("j", "default")
+    c = rm.allocate(app, ContainerRequest(Resource(1024, 1, 2), "gpu"))
+    assert c.node_id.startswith("gpu-node")
+    with pytest.raises(AllocationError):
+        rm.allocate(app, ContainerRequest(Resource(1024, 1, 1), "highmem"))
+    assert rm.invariants_ok()
+
+
+def test_rm_respects_node_capacity():
+    rm = ResourceManager([Node("n0", Resource(4096, 4, 2), frozenset({"gpu"}))])
+    app = rm.submit_application("j", "default")
+    rm.allocate(app, ContainerRequest(Resource(2048, 2, 1)))
+    rm.allocate(app, ContainerRequest(Resource(2048, 2, 1)))
+    with pytest.raises(AllocationError):
+        rm.allocate(app, ContainerRequest(Resource(1, 1, 0)))
+    assert rm.invariants_ok()
+
+
+def test_rm_queue_capacity_enforced():
+    rm = ResourceManager(
+        [Node("n0", Resource(10_000, 100, 0))],
+        queues={"prod": 0.8, "adhoc": 0.2})
+    a1 = rm.submit_application("p", "prod")
+    a2 = rm.submit_application("q", "adhoc")
+    rm.allocate(a2, ContainerRequest(Resource(2000, 10, 0)))
+    with pytest.raises(AllocationError):  # adhoc over its 20% share
+        rm.allocate(a2, ContainerRequest(Resource(100, 1, 0)))
+    rm.allocate(a1, ContainerRequest(Resource(7000, 10, 0)))  # prod fits
+    assert rm.invariants_ok()
+
+
+def test_rm_release_returns_resources():
+    rm = make_cluster(num_gpu_nodes=1, num_cpu_nodes=0, gpus_per_node=2)
+    app = rm.submit_application("j", "default")
+    c1 = rm.allocate(app, ContainerRequest(Resource(1024, 1, 2)))
+    with pytest.raises(AllocationError):
+        rm.allocate(app, ContainerRequest(Resource(1024, 1, 1)))
+    rm.release(c1.container_id)
+    rm.allocate(app, ContainerRequest(Resource(1024, 1, 2)))
+    assert rm.invariants_ok()
+
+
+def test_allocate_many_rolls_back_on_failure():
+    rm = make_cluster(num_gpu_nodes=1, num_cpu_nodes=0, gpus_per_node=4)
+    app = rm.submit_application("j", "default")
+    with pytest.raises(AllocationError):
+        rm.allocate_many(app, ContainerRequest(Resource(1024, 1, 1), "gpu"), 9)
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+# ----------------------------------------------------------------------
+# Config / cluster spec
+
+
+def test_xml_round_trip():
+    spec = JobSpec(
+        name="my-job",
+        tasks={"worker": TaskSpec("worker", 4, Resource(8192, 4, 1), "gpu"),
+               "ps": TaskSpec("ps", 2, Resource(4096, 2, 0), None)},
+        queue="prod", args={"lr": "0.1"})
+    again = parse_tony_xml(to_tony_xml(spec))
+    assert again.tasks["worker"].instances == 4
+    assert again.tasks["worker"].resource.gpus == 1
+    assert again.tasks["worker"].node_label == "gpu"
+    assert again.tasks["ps"].resource.memory_mb == 4096
+    assert again.args == {"lr": "0.1"}
+    assert again.queue == "prod"
+
+
+def test_xml_requires_tasks():
+    with pytest.raises(ValueError):
+        parse_tony_xml("<configuration></configuration>")
+
+
+def test_cluster_spec_ordering_and_env():
+    addrs = [TaskAddress("worker", 1, "h1", 2), TaskAddress("worker", 0, "h0", 1),
+             TaskAddress("ps", 0, "h2", 3)]
+    spec = build_cluster_spec(addrs)
+    assert spec == {"ps": ["h2:3"], "worker": ["h0:1", "h1:2"]}
+    env = task_env(spec, "worker", 1, {"lr": "0.1"})
+    assert env["TASK_TYPE"] == "worker" and env["TASK_INDEX"] == "1"
+    assert env["WORLD_SIZE"] == "3"
+    assert env["JOB_ARG_LR"] == "0.1"
+    assert '"worker"' in env["TF_CONFIG"]
+
+
+# ----------------------------------------------------------------------
+# Client + AM lifecycle (fast dummy programs, no JAX)
+
+
+def _ok_program(env, ctx):
+    ctx.rendezvous(timeout=10)
+    ctx.shared[f"metrics:{env['TASK_TYPE']}:{env['TASK_INDEX']}"] = {
+        "peak_memory_mb": 100.0}
+    return 0
+
+
+def _job(workers=2, ps=1, attempts=3):
+    return job_spec_from_props({
+        "tony.application.name": "t",
+        "tony.application.max-attempts": str(attempts),
+        "tony.worker.instances": str(workers),
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+        "tony.ps.instances": str(ps),
+        "tony.ps.memory": "512",
+        "tony.ps.node-label": "highmem",
+    })
+
+
+def test_job_lifecycle_success():
+    rm = make_cluster()
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(_job(), _ok_program,
+                                                       timeout=60)
+    assert res.succeeded and len(res.attempts) == 1
+    assert res.ui_url and res.ui_url.startswith("http://")
+    assert rm.app_state(res.app_id) == "FINISHED"
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+    # every task registered exactly once and exited 0
+    a = res.attempts[0]
+    assert set(a.exit_statuses) == {"worker:0", "worker:1", "ps:0"}
+    assert all(v == 0 for v in a.exit_statuses.values())
+    assert a.cluster_spec is not None and len(a.cluster_spec["worker"]) == 2
+
+
+def test_job_relaunch_on_transient_failure():
+    rm = make_cluster()
+    calls = {"n": 0}
+
+    def flaky(env, ctx):
+        ctx.rendezvous(timeout=10)
+        if env["TASK_TYPE"] == "worker" and env["TASK_INDEX"] == "0":
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient")
+        return 0
+
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(_job(), flaky, timeout=60)
+    assert res.succeeded and len(res.attempts) == 2
+    assert "worker:0" in res.attempts[0].failed_tasks
+    assert rm.invariants_ok()
+
+
+def test_job_fails_after_max_attempts():
+    rm = make_cluster()
+
+    def always_fail(env, ctx):
+        ctx.rendezvous(timeout=10)
+        return 1 if env["TASK_TYPE"] == "worker" else 0
+
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(_job(attempts=2),
+                                                       always_fail, timeout=60)
+    assert not res.succeeded and len(res.attempts) == 2
+    assert rm.app_state(res.app_id) == "FAILED"
+    assert not rm.live_containers()
+
+
+def test_job_allocation_failure_is_reported():
+    rm = make_cluster(num_gpu_nodes=1, gpus_per_node=1)  # can't fit 2 GPU workers
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(_job(workers=8),
+                                                       _ok_program, timeout=60)
+    assert not res.succeeded
+    assert res.attempts[0].failed_tasks == ["__allocation__"]
+    assert rm.invariants_ok()
+
+
+def test_heterogeneous_allocation_places_by_label():
+    rm = make_cluster()
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(_job(), _ok_program,
+                                                       timeout=60)
+    nodes = {e.payload["node"]: e.payload for e in
+             rm.events.of_kind("container_allocated")}
+    gpu_allocs = [p for p in nodes.values() if p["gpus"] > 0]
+    cpu_allocs = [p for p in nodes.values() if p["gpus"] == 0]
+    assert all(p["node"].startswith("gpu-node") for p in gpu_allocs)
+    assert all(p["node"].startswith("cpu-node") for p in cpu_allocs)
+    assert res.succeeded
+
+
+def test_metrics_analyzer_suggests_memory_reduction():
+    rm = make_cluster()
+    job = _job()
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(job, _ok_program,
+                                                       timeout=60)
+    hist = JobHistoryServer()
+    hist.record(job, res)
+    assert hist.summary(res.app_id)["status"] == "SUCCEEDED"
+    kinds = {s.kind for s in MetricsAnalyzer().analyze(job, res)}
+    assert "memory_overprovisioned" in kinds  # 100MB used vs 1024MB asked
+
+
+# ----------------------------------------------------------------------
+# Workflow (Azkaban plugin analogue)
+
+
+def test_workflow_runs_tony_job_in_dag():
+    rm = make_cluster()
+    client = TonYClient(YarnLikeBackend(rm))
+    order = []
+    wf = Workflow("pipeline")
+    wf.add_command("preprocess", lambda ctx: order.append("pre"))
+    wf.add_tony_job("train", client, _job(), _ok_program, deps=("preprocess",))
+    wf.add_command("deploy", lambda ctx: order.append("deploy"),
+                   deps=("train",))
+    results = wf.execute()
+    assert all(r.status == "SUCCEEDED" for r in results.values())
+    assert order == ["pre", "deploy"]
+
+
+def test_workflow_skips_dependents_on_failure():
+    wf = Workflow("w")
+    wf.add_command("a", lambda ctx: (_ for _ in ()).throw(RuntimeError("x")))
+    wf.add_command("b", lambda ctx: 1, deps=("a",))
+    wf.add_command("c", lambda ctx: 2)
+    res = wf.execute()
+    assert res["a"].status == "FAILED"
+    assert res["b"].status == "SKIPPED"
+    assert res["c"].status == "SUCCEEDED"
+
+
+def test_workflow_rejects_cycles():
+    wf = Workflow("w")
+    wf.add_command("a", lambda ctx: 1, deps=("b",))
+    wf.add_command("b", lambda ctx: 1, deps=("a",))
+    with pytest.raises(ValueError, match="cycle"):
+        wf.execute()
+
+
+def test_workflow_parallel_where_independent():
+    wf = Workflow("w")
+    t0 = time.monotonic()
+    wf.add_command("a", lambda ctx: time.sleep(0.2))
+    wf.add_command("b", lambda ctx: time.sleep(0.2))
+    wf.execute()
+    assert time.monotonic() - t0 < 0.38  # ran concurrently
+
+
+def test_negotiation_waits_for_contended_resources():
+    """A gang that doesn't fit NOW succeeds once a competing job releases
+    (paper §1: resource contention; AM backoff instead of failing)."""
+    rm = make_cluster(num_gpu_nodes=1, num_cpu_nodes=0, gpus_per_node=2)
+    app_other = rm.submit_application("hog", "default")
+    hogs = [rm.allocate(app_other, ContainerRequest(Resource(1024, 1, 1), "gpu"))
+            for _ in range(2)]
+
+    def release_later():
+        time.sleep(0.3)
+        for c in hogs:
+            rm.release(c.container_id)
+
+    threading.Thread(target=release_later, daemon=True).start()
+    job = job_spec_from_props({
+        "tony.application.name": "waiter",
+        "tony.worker.instances": "2",
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(job, _ok_program,
+                                                       timeout=60)
+    assert res.succeeded and len(res.attempts) == 1
+    assert rm.events.count("negotiation_waiting") == 1
+    assert rm.events.count("negotiation_unblocked") == 1
+    assert rm.invariants_ok()
+
+
+def test_rm_elastic_preemption_mechanics():
+    """Elastic queues borrow idle capacity; preemption reclaims it."""
+    rm = ResourceManager(
+        [Node("n0", Resource(10_000, 100, 0))],
+        queues={"prod": 0.8, "adhoc": 0.2}, elastic=True)
+    a_hog = rm.submit_application("hog", "adhoc")
+    hogs = [rm.allocate(a_hog, ContainerRequest(Resource(4000, 10, 0)))
+            for _ in range(2)]  # 8000 MB on a 20% (2000 MB) share: over-share
+    assert rm.queue_over_share("adhoc")
+    a_prod = rm.submit_application("p", "prod")
+    with pytest.raises(AllocationError):
+        rm.allocate(a_prod, ContainerRequest(Resource(6000, 10, 0)))
+    n = rm.try_preempt_for(a_prod, ContainerRequest(Resource(6000, 10, 0)))
+    assert n >= 1
+    assert rm.events.count("container_preempted") == n
+    rm.allocate(a_prod, ContainerRequest(Resource(6000, 10, 0)))  # now fits
+    assert rm.invariants_ok()
+    del hogs
+
+
+def test_e2e_preemption_triggers_victim_relaunch():
+    """A prod job preempts an over-share adhoc job; the victim's executor
+    observes the PREEMPTED container and its AM relaunches the attempt."""
+    rm = ResourceManager(
+        [Node(f"n{i}", Resource(4096, 8, 0)) for i in range(2)],
+        queues={"prod": 0.75, "adhoc": 0.25}, elastic=True)
+    client = TonYClient(YarnLikeBackend(rm))
+
+    release = threading.Event()
+
+    def hog_program(env, ctx):
+        ctx.rendezvous(timeout=10)
+        deadline = time.monotonic() + 20.0
+        while not release.is_set() and not ctx.cancel.is_set() \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        return 0
+
+    hog_job = job_spec_from_props({
+        "tony.application.name": "hog",
+        "tony.yarn.queue": "adhoc",
+        "tony.application.max-attempts": "10",  # survives repeated preemption
+        "tony.worker.instances": "2",
+        "tony.worker.memory": "3000",   # 6000 MB total on a 2048 MB share
+        "tony.worker.vcores": "1",
+    })
+    hog_handle = client.submit(hog_job, hog_program)
+    while rm.events.count("cluster_spec_built") < 1:
+        time.sleep(0.01)
+    assert rm.queue_over_share("adhoc")
+
+    prod_job = job_spec_from_props({
+        "tony.application.name": "urgent",
+        "tony.yarn.queue": "prod",
+        "tony.worker.instances": "2",
+        "tony.worker.memory": "2500",
+        "tony.worker.vcores": "1",
+    })
+    prod_res = client.run_and_wait(prod_job, _ok_program, timeout=60)
+    assert prod_res.succeeded
+    assert rm.events.count("container_preempted") >= 1
+
+    release.set()  # let the (relaunched) hog attempt finish
+    hog_res = hog_handle.wait(timeout=60)
+    assert hog_res.succeeded
+    assert len(hog_res.attempts) >= 2          # attempt 1 was preempted
+    assert any("worker" in t for t in hog_res.attempts[0].failed_tasks)
+    assert rm.invariants_ok()

@@ -1,0 +1,45 @@
+"""Serving-path tests: batched generation across architecture families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import batched_generate
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-3b", "recurrentgemma-2b"])
+def test_batched_generate_shapes_and_determinism(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, rng)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, size=(3, 5))
+    g1, s1 = batched_generate(cfg, params, prompts, gen_len=7, cache_len=12)
+    g2, _ = batched_generate(cfg, params, prompts, gen_len=7, cache_len=12)
+    assert g1.shape == (3, 7)
+    assert (g1 == g2).all()              # greedy decode is deterministic
+    assert s1["tokens_generated"] == 21
+    assert (g1 >= 0).all() and (g1 < cfg.vocab_size).all()
+
+
+def test_generate_uses_prompt_context(rng):
+    """Different prompts must lead to different continuations (cache works)."""
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = M.init_params(cfg, rng)
+    r = np.random.default_rng(1)
+    p1 = r.integers(0, cfg.vocab_size, size=(1, 6))
+    p2 = (p1 + 13) % cfg.vocab_size
+    g1, _ = batched_generate(cfg, params, p1, gen_len=6, cache_len=12)
+    g2, _ = batched_generate(cfg, params, p2, gen_len=6, cache_len=12)
+    assert (g1 != g2).any()
+
+
+def test_decode_state_pos_advances(rng):
+    cfg = get_smoke_config("llama3.2-3b")
+    params = M.init_params(cfg, rng)
+    state = M.init_decode_state(cfg, params, 2, 8)
+    assert int(state["pos"]) == 0
+    tok = jnp.zeros((2, 1), jnp.int32)
+    _, state = M.decode_step(cfg, params, state, tok, 8)
+    _, state = M.decode_step(cfg, params, state, tok, 8)
+    assert int(state["pos"]) == 2
