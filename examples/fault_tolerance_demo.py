@@ -1,13 +1,20 @@
 """Fault-tolerance demo (paper §2.2): a worker dies mid-training; the AM
-tears the attempt down, negotiates fresh containers, broadcasts a NEW cluster
-spec, and the relaunched job restores from the last checkpoint.
+classifies the failure (TRANSIENT), schedules a retry with backoff, tears the
+attempt down, negotiates fresh containers, broadcasts a NEW cluster spec, and
+the relaunched job restores from the last checkpoint.
 
     PYTHONPATH=src python examples/fault_tolerance_demo.py
 """
 import tempfile
 
 from repro.configs import get_config
-from repro.core import TonYClient, YarnLikeBackend, job_spec_from_props, make_cluster
+from repro.core import (
+    FailureClass,
+    TonYClient,
+    YarnLikeBackend,
+    job_spec_from_props,
+    make_cluster,
+)
 from repro.launch.programs import make_train_program
 
 
@@ -36,6 +43,16 @@ def main() -> None:
 
     print("attempts:", len(result.attempts))
     print("attempt 1 failed tasks:", result.attempts[0].failed_tasks)
+
+    # the diagnostics subsystem attributed the crash before retrying
+    diag = result.diagnostics["a1/worker:0"]
+    print(f"attempt 1 diagnosis: [{diag.classification.value}] "
+          f"{diag.exception_type}: {diag.message}")
+    assert diag.classification is FailureClass.TRANSIENT
+    assert "injected transient failure" in diag.traceback
+    retry_ev = rm.events.of_kind("retry_scheduled")[0]
+    print(f"retry scheduled with backoff_s={retry_ev.payload['backoff_s']}")
+
     steps = [s for s, _ in trace]
     resume = next(s for i, s in enumerate(steps[1:], 1) if s <= steps[i - 1])
     print(f"attempt 2 resumed from checkpoint at step {resume} (not step 0)")
@@ -44,6 +61,8 @@ def main() -> None:
     print("containers allocated total:",
           rm.events.count("container_allocated"), "(2 per attempt)")
     assert result.succeeded and len(result.attempts) == 2 and resume == 12
+    print("failure timeline kinds:",
+          [e.kind for e in rm.events.failure_timeline()])
     print("OK")
 
 

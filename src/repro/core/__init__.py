@@ -4,11 +4,24 @@ Client -> (archive) -> scheduler backend -> ApplicationMaster -> containers
 -> TaskExecutors -> cluster spec -> ML child processes -> heartbeats ->
 exit statuses, with relaunch-on-failure and history/metrics collection.
 """
-from repro.core.appmaster import ApplicationMaster, JobResult  # noqa: F401
-from repro.core.client import JobHandle, TonYClient, YarnLikeBackend  # noqa: F401
+from repro.core.appmaster import ApplicationMaster, AttemptReport, JobResult  # noqa: F401
+from repro.core.client import (  # noqa: F401
+    JobHandle,
+    TonYClient,
+    YarnLikeBackend,
+    format_failure_report,
+)
 from repro.core.cluster_spec import build_cluster_spec, task_env  # noqa: F401
 from repro.core.config import job_spec_from_props, parse_tony_xml, to_tony_xml  # noqa: F401
-from repro.core.events import Event, EventLog  # noqa: F401
+from repro.core.events import FAILURE_EVENT_KINDS, Event, EventLog  # noqa: F401
+from repro.core.failures import (  # noqa: F401
+    FailureClass,
+    RetryDecision,
+    RetryPolicy,
+    TaskDiagnostics,
+    classify_exception,
+    classify_exit,
+)
 from repro.core.history import JobHistoryServer, MetricsAnalyzer  # noqa: F401
 from repro.core.resources import (  # noqa: F401
     Container,

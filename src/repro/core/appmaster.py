@@ -15,6 +15,14 @@ from typing import Any
 
 from repro.core.cluster_spec import TaskAddress, build_cluster_spec
 from repro.core.events import EventLog
+from repro.core.failures import (
+    EXIT_PREEMPTED,
+    RetryPolicy,
+    TaskDiagnostics,
+    diagnose_allocation_failure,
+    diagnose_exit,
+    diagnose_heartbeat_timeout,
+)
 from repro.core.resources import (
     Container,
     ContainerRequest,
@@ -40,6 +48,9 @@ class AttemptReport:
     cluster_spec: dict | None = None
     failed_tasks: list[str] = field(default_factory=list)
     duration_s: float = 0.0
+    # task_id -> attributed failure (exception type/message/traceback +
+    # classification) for every entry in failed_tasks
+    diagnostics: dict[str, TaskDiagnostics] = field(default_factory=dict)
 
 
 @dataclass
@@ -50,10 +61,19 @@ class JobResult:
     ui_url: str | None
     task_logs: dict[str, list[str]]
     metrics: dict[str, dict[str, float]]
+    # "a<attempt>/<task_id>" -> TaskDiagnostics, across every attempt
+    diagnostics: dict[str, TaskDiagnostics] = field(default_factory=dict)
 
     @property
     def succeeded(self) -> bool:
         return self.final_status == "SUCCEEDED"
+
+    def failure_summary(self) -> list[str]:
+        """Human-readable one-liner per attributed failure, in attempt order."""
+        return [f"{key}: [{d.classification.value}] "
+                + (f"{d.exception_type}: {d.message}" if d.exception_type
+                   else f"exit status {d.exit_status}")
+                for key, d in sorted(self.diagnostics.items())]
 
 
 class ApplicationMaster(ApplicationMasterProtocol):
@@ -63,7 +83,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
     def __init__(self, rm: ResourceManager, app_id: str, job: JobSpec,
                  ml_program: MLProgram, events: EventLog | None = None,
                  ports: PortAllocator | None = None,
-                 workdir: str = ""):
+                 workdir: str = "",
+                 retry_policy: RetryPolicy | None = None):
         self.rm = rm
         self.app_id = app_id
         self.job = job
@@ -71,6 +92,9 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self.events = events or rm.events
         self.ports = ports or PortAllocator()
         self.workdir = workdir
+        self.retry_policy = retry_policy or RetryPolicy(
+            max_attempts=job.max_app_attempts)
+        self.heartbeat_timeout_s = HEARTBEAT_TIMEOUT_S
         self.ui_url: str | None = None
         self.task_logs: dict[str, list[str]] = {}
         self.metrics: dict[str, dict[str, float]] = {}
@@ -78,6 +102,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self._registrations: dict[str, tuple[TaskExecutor, TaskAddress]] = {}
         self._last_heartbeat: dict[str, float] = {}
         self._exits: dict[str, int] = {}
+        self._exit_diagnostics: dict[str, TaskDiagnostics] = {}
+        self._stale_tasks: dict[str, TaskDiagnostics] = {}
         self._all_registered = threading.Event()
         self._world_size = sum(t.instances for t in self.job.tasks.values())
 
@@ -102,32 +128,58 @@ class ApplicationMaster(ApplicationMasterProtocol):
         with self._lock:
             self._last_heartbeat[task_id] = time.monotonic()
 
-    def report_exit(self, task_id: str, status: int) -> None:
+    def report_exit(self, task_id: str, status: int,
+                    diagnostics: TaskDiagnostics | None = None) -> None:
         with self._lock:
             self._exits[task_id] = status
+            if diagnostics is not None:
+                self._exit_diagnostics[task_id] = diagnostics
         self.events.emit("am", "task_exit", task=task_id, status=status)
 
     # ------------------------------------------------------------------
     def run(self) -> JobResult:
         self.rm.set_app_state(self.app_id, "RUNNING")
+        policy = self.retry_policy
         attempts: list[AttemptReport] = []
-        for attempt in range(1, self.job.max_app_attempts + 1):
+        diagnostics: dict[str, TaskDiagnostics] = {}
+        attempt = 0
+        while True:
+            attempt += 1
             report = self._run_attempt(attempt)
             attempts.append(report)
+            for task_id, diag in report.diagnostics.items():
+                diagnostics[f"a{attempt}/{task_id}"] = diag
             if not report.failed_tasks:
                 self.rm.set_app_state(self.app_id, "FINISHED")
                 return JobResult(self.app_id, "SUCCEEDED", attempts,
-                                 self.ui_url, self.task_logs, self.metrics)
+                                 self.ui_url, self.task_logs, self.metrics,
+                                 diagnostics)
             self.events.emit("am", "attempt_failed", attempt=attempt,
                              failed=report.failed_tasks)
-            if any(s == 137 for s in report.exit_statuses.values()):
-                # preempted by the scheduler: back off before renegotiating
-                # instead of ping-ponging with the preemptor's gang request
+            classes = {d.classification for d in report.diagnostics.values()}
+            self.events.emit(
+                "am", "attempt_classified", attempt=attempt,
+                classes=sorted(c.value for c in classes),
+                failures={t: d.describe()
+                          for t, d in report.diagnostics.items()})
+            decision = policy.decide(attempt, classes)
+            if not decision.retry:
+                self.events.emit("am", "retry_abandoned", attempt=attempt,
+                                 reason=decision.reason)
+                break
+            backoff = decision.backoff_s
+            if any(s == EXIT_PREEMPTED for s in report.exit_statuses.values()):
+                # preempted by the scheduler: back off at least the preemption
+                # grace instead of ping-ponging with the preemptor's gang ask
+                backoff = max(backoff, self.PREEMPTION_BACKOFF_S)
                 self.events.emit("am", "preemption_backoff", attempt=attempt)
-                time.sleep(self.PREEMPTION_BACKOFF_S)
+            self.events.emit("am", "retry_scheduled", attempt=attempt,
+                             next_attempt=attempt + 1, backoff_s=backoff,
+                             reason=decision.reason)
+            policy.sleep(backoff)
         self.rm.set_app_state(self.app_id, "FAILED")
         return JobResult(self.app_id, "FAILED", attempts, self.ui_url,
-                         self.task_logs, self.metrics)
+                         self.task_logs, self.metrics, diagnostics)
 
     # ------------------------------------------------------------------
     NEGOTIATION_TIMEOUT_S = 5.0
@@ -178,14 +230,22 @@ class ApplicationMaster(ApplicationMasterProtocol):
         t0 = time.monotonic()
         self._registrations.clear()
         self._exits.clear()
+        self._exit_diagnostics.clear()
+        self._stale_tasks.clear()
         self._all_registered.clear()
 
         try:
             containers = self._negotiate_containers()
         except AllocationError as e:
             self.events.emit("am", "allocation_failed", error=str(e))
+            diag = diagnose_allocation_failure(str(e))
+            self.events.emit("am", "task_failed", attempt=attempt,
+                             task="__allocation__",
+                             classification=diag.classification.value,
+                             reason=diag.message)
             return AttemptReport(attempt, failed_tasks=["__allocation__"],
-                                 duration_s=time.monotonic() - t0)
+                                 duration_s=time.monotonic() - t0,
+                                 diagnostics={"__allocation__": diag})
 
         ctx = JobContext(world_size=self._world_size, workdir=self.workdir)
         ctx.shared["attempt"] = attempt
@@ -224,11 +284,17 @@ class ApplicationMaster(ApplicationMasterProtocol):
                 any_fail = any(s != 0 for s in self._exits.values())
                 stale = [tid for tid, ts in self._last_heartbeat.items()
                          if tid not in self._exits
-                         and time.monotonic() - ts > HEARTBEAT_TIMEOUT_S]
+                         and time.monotonic() - ts > self.heartbeat_timeout_s]
             if any_fail or stale:
                 ctx.cancel.set()   # teardown remaining tasks (paper §2.2)
                 for tid in stale:
-                    self.events.emit("am", "heartbeat_lost", task=tid)
+                    if tid not in self._stale_tasks:
+                        # a lost heartbeat is a classified failure, not just
+                        # a log line: record it so the retry policy and the
+                        # history server can attribute the attempt's death
+                        self._stale_tasks[tid] = diagnose_heartbeat_timeout(
+                            tid, self.heartbeat_timeout_s)
+                        self.events.emit("am", "heartbeat_lost", task=tid)
             if n_exit == len(executors):
                 break
             time.sleep(0.01)
@@ -241,9 +307,21 @@ class ApplicationMaster(ApplicationMasterProtocol):
 
         with self._lock:
             exits = dict(self._exits)
+            exit_diags = dict(self._exit_diagnostics)
         failed = sorted([tid for tid, s in exits.items() if s != 0]
                         + [tid for tid in self._last_heartbeat
                            if tid not in exits])
+
+        # attribute every failure: a child exception beats a heartbeat
+        # timeout beats a bare exit code
+        diagnostics: dict[str, TaskDiagnostics] = {}
+        for tid in failed:
+            diag = (exit_diags.get(tid) or self._stale_tasks.get(tid)
+                    or diagnose_exit(tid, exits.get(tid, -1)))
+            diagnostics[tid] = diag
+            self.events.emit("am", "task_failed", attempt=attempt, task=tid,
+                             classification=diag.classification.value,
+                             reason=diag.describe())
 
         for clist in containers.values():
             for c in clist:
@@ -251,4 +329,4 @@ class ApplicationMaster(ApplicationMasterProtocol):
                 self.rm.release(c.container_id, st)
 
         return AttemptReport(attempt, exits, spec, failed,
-                             time.monotonic() - t0)
+                             time.monotonic() - t0, diagnostics)

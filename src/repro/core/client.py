@@ -19,9 +19,25 @@ from typing import Callable
 from repro.core.appmaster import ApplicationMaster, JobResult
 from repro.core.config import to_tony_xml
 from repro.core.events import EventLog
+from repro.core.failures import RetryPolicy, TaskDiagnostics
 from repro.core.resources import JobSpec
 from repro.core.rm import ResourceManager
 from repro.core.task_executor import MLProgram
+
+
+def format_failure_report(result: JobResult) -> str:
+    """Render a failed (or flaky) job's diagnostics as the one-stop text the
+    user sees: per-task classification, message, and traceback."""
+    if result.succeeded and len(result.attempts) == 1:
+        return f"{result.app_id}: SUCCEEDED in 1 attempt"
+    lines = [f"{result.app_id}: {result.final_status} "
+             f"after {len(result.attempts)} attempt(s)"]
+    for key, diag in sorted(result.diagnostics.items()):
+        lines.append(f"  {diag.describe().replace(diag.task_id, key, 1)}")
+        if diag.traceback:
+            lines.extend("    | " + ln
+                         for ln in diag.traceback.rstrip().splitlines())
+    return "\n".join(lines)
 
 
 class SchedulerBackend:
@@ -53,20 +69,27 @@ class JobHandle:
     def result(self) -> JobResult | None:
         return self._result_box.get("result")
 
+    def diagnostics(self) -> dict[str, TaskDiagnostics]:
+        res = self.result()
+        return dict(res.diagnostics) if res else {}
+
 
 class YarnLikeBackend(SchedulerBackend):
     """Submits to the in-process simulated RM (the container-friendly stand-in
     for YARN; swapping this class is the paper's scheduler-pluggability)."""
 
-    def __init__(self, rm: ResourceManager, workdir: str = ""):
+    def __init__(self, rm: ResourceManager, workdir: str = "",
+                 retry_policy: RetryPolicy | None = None):
         self.rm = rm
         self.workdir = workdir
+        self.retry_policy = retry_policy
 
     def submit(self, job: JobSpec, archive_path: str,
                ml_program: MLProgram) -> JobHandle:
         app_id = self.rm.submit_application(job.name, job.queue)
         am = ApplicationMaster(self.rm, app_id, job, ml_program,
-                               workdir=self.workdir)
+                               workdir=self.workdir,
+                               retry_policy=self.retry_policy)
         box: dict = {}
 
         def run():

@@ -16,6 +16,16 @@ class Event:
     payload: dict[str, Any] = field(default_factory=dict)
 
 
+#: Failure-diagnostics event kinds emitted by the AM (core/failures.py):
+#:   task_failed        — one task's attributed failure (classification+reason)
+#:   attempt_classified — the attempt's overall failure-class set
+#:   retry_scheduled    — the policy granted a relaunch (backoff_s, reason)
+#:   retry_abandoned    — the policy refused (fail-fast or budget exhausted)
+FAILURE_EVENT_KINDS = frozenset({
+    "task_failed", "attempt_classified", "retry_scheduled", "retry_abandoned",
+})
+
+
 class EventLog:
     def __init__(self):
         self._events: list[Event] = []
@@ -36,3 +46,8 @@ class EventLog:
 
     def count(self, kind: str) -> int:
         return len(self.of_kind(kind))
+
+    def failure_timeline(self) -> list[Event]:
+        """All failure-diagnostics events in order — the 'why did my job
+        fail' trail the history server renders."""
+        return [e for e in self.all() if e.kind in FAILURE_EVENT_KINDS]

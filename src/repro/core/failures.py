@@ -1,0 +1,186 @@
+"""Failure diagnostics + retry policy — the orchestrator's answer to
+"why did my job fail, and was retrying it ever going to help?".
+
+Three pieces:
+
+* ``TaskDiagnostics`` — what one task's failure looked like (exception type,
+  message, formatted traceback, exit status) plus a classification.
+* ``FailureClass`` — FATAL_USER (broken user code: retrying burns cluster
+  time and can never succeed), TRANSIENT (injected faults, heartbeat
+  timeouts, allocation contention: retry with backoff), INFRA (RM/container
+  trouble such as preemption or executor-side errors: retry, the cluster may
+  recover).
+* ``RetryPolicy`` — attempt budget + exponential backoff with an injectable
+  sleep so tests run on a fake clock, and fail-fast classes that abort the
+  retry loop immediately.
+
+The AM consults the policy between attempts; TaskExecutors produce the
+diagnostics; the history server and metrics analyzer surface them.
+"""
+from __future__ import annotations
+
+import time
+import traceback as _tb
+from dataclasses import dataclass, field, replace
+from enum import Enum
+from typing import Callable, Iterable
+
+
+class FailureClass(Enum):
+    FATAL_USER = "FATAL_USER"   # bad user code — never worth retrying
+    TRANSIENT = "TRANSIENT"     # flaky env / injected fault — retry w/ backoff
+    INFRA = "INFRA"             # RM / container / executor trouble — retry
+
+    def __str__(self) -> str:  # event payloads + summaries read naturally
+        return self.value
+
+
+#: Exception types that indicate the user's program itself is broken; no
+#: number of relaunches will fix a module that doesn't import or a name that
+#: doesn't resolve.
+FATAL_USER_EXCEPTIONS = frozenset({
+    "ImportError", "ModuleNotFoundError", "AttributeError", "NameError",
+    "SyntaxError", "IndentationError", "NotImplementedError",
+})
+
+#: Container exit codes with a known infra meaning (YARN conventions).
+EXIT_PREEMPTED = 137        # SIGKILL by the scheduler
+EXIT_TEARDOWN = 143         # SIGTERM by the AM (sibling failed / cancel)
+EXIT_EXECUTOR_ERROR = 2     # the executor itself (not the child) broke
+
+
+@dataclass(frozen=True)
+class TaskDiagnostics:
+    """One task's failure, attributed. ``traceback`` is the full formatted
+    traceback when the failure was an exception in the child program."""
+    task_id: str
+    exit_status: int
+    classification: FailureClass
+    exception_type: str = ""
+    message: str = ""
+    traceback: str = ""
+
+    def to_dict(self) -> dict:
+        return {
+            "task_id": self.task_id,
+            "exit_status": self.exit_status,
+            "classification": self.classification.value,
+            "exception_type": self.exception_type,
+            "message": self.message,
+            "traceback": self.traceback,
+        }
+
+    def describe(self) -> str:
+        head = f"{self.task_id}: [{self.classification.value}]"
+        if self.exception_type:
+            return f"{head} {self.exception_type}: {self.message}"
+        return f"{head} exit status {self.exit_status}"
+
+
+def classify_exception(exc: BaseException | str) -> FailureClass:
+    """Map a child-program exception (or its type name) to a failure class."""
+    name = exc if isinstance(exc, str) else type(exc).__name__
+    if name in FATAL_USER_EXCEPTIONS:
+        return FailureClass.FATAL_USER
+    return FailureClass.TRANSIENT
+
+
+def classify_exit(status: int) -> FailureClass:
+    """Classify a nonzero exit with no exception attached to it."""
+    if status == EXIT_PREEMPTED or status == EXIT_EXECUTOR_ERROR:
+        return FailureClass.INFRA
+    return FailureClass.TRANSIENT
+
+
+def diagnose_exception(task_id: str, exc: BaseException,
+                       exit_status: int = 1) -> TaskDiagnostics:
+    """Build diagnostics from a live exception (captures the traceback)."""
+    return TaskDiagnostics(
+        task_id=task_id,
+        exit_status=exit_status,
+        classification=classify_exception(exc),
+        exception_type=type(exc).__name__,
+        message=str(exc),
+        traceback="".join(_tb.format_exception(type(exc), exc,
+                                               exc.__traceback__)),
+    )
+
+
+def diagnose_exit(task_id: str, status: int) -> TaskDiagnostics:
+    reasons = {
+        EXIT_PREEMPTED: "container preempted by the scheduler",
+        EXIT_TEARDOWN: "torn down by the AM (a sibling task failed or the "
+                       "attempt was cancelled)",
+        EXIT_EXECUTOR_ERROR: "task executor error (not the ML program)",
+        3: "cancelled before the job rendezvoused",
+    }
+    return TaskDiagnostics(
+        task_id=task_id, exit_status=status,
+        classification=classify_exit(status),
+        message=reasons.get(status, f"exited with status {status}"))
+
+
+def diagnose_heartbeat_timeout(task_id: str, timeout_s: float) -> TaskDiagnostics:
+    return TaskDiagnostics(
+        task_id=task_id, exit_status=-1,
+        classification=FailureClass.TRANSIENT,
+        exception_type="HeartbeatTimeout",
+        message=f"no heartbeat for more than {timeout_s:g}s; "
+                "task presumed hung or its node lost")
+
+
+def diagnose_allocation_failure(error: str) -> TaskDiagnostics:
+    # Allocation failures are contention, not broken code: another attempt
+    # may find capacity freed (classified TRANSIENT per the survey's
+    # fault-tolerance taxonomy).
+    return TaskDiagnostics(
+        task_id="__allocation__", exit_status=-1,
+        classification=FailureClass.TRANSIENT,
+        exception_type="AllocationError", message=error)
+
+
+@dataclass(frozen=True)
+class RetryDecision:
+    retry: bool
+    reason: str
+    backoff_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Attempt budget + exponential backoff + fail-fast classes.
+
+    ``sleep`` is injectable so tests drive the backoff on a fake clock; the
+    default is the real ``time.sleep``.
+    """
+    max_attempts: int = 3
+    base_backoff_s: float = 0.05
+    backoff_multiplier: float = 2.0
+    max_backoff_s: float = 2.0
+    fail_fast_on: frozenset = frozenset({FailureClass.FATAL_USER})
+    sleep: Callable[[float], None] = field(default=time.sleep, repr=False,
+                                           compare=False)
+
+    def with_clock(self, sleep: Callable[[float], None]) -> "RetryPolicy":
+        return replace(self, sleep=sleep)
+
+    def backoff_for(self, attempt: int) -> float:
+        """Backoff before relaunching after ``attempt`` (1-based) failed."""
+        raw = self.base_backoff_s * self.backoff_multiplier ** (attempt - 1)
+        return min(raw, self.max_backoff_s)
+
+    def decide(self, attempt: int,
+               classes: Iterable[FailureClass]) -> RetryDecision:
+        classes = set(classes)
+        fatal = classes & set(self.fail_fast_on)
+        if fatal:
+            return RetryDecision(
+                False, "fail-fast: " + ", ".join(sorted(c.value for c in fatal))
+                + " failures cannot succeed on retry")
+        if attempt >= self.max_attempts:
+            return RetryDecision(
+                False, f"attempt budget exhausted ({self.max_attempts})")
+        return RetryDecision(True, "retryable failure classes: "
+                             + (", ".join(sorted(c.value for c in classes))
+                                or "unknown"),
+                             backoff_s=self.backoff_for(attempt))

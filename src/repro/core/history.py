@@ -6,6 +6,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.appmaster import JobResult
+from repro.core.failures import FailureClass
 from repro.core.resources import JobSpec
 
 
@@ -33,7 +34,10 @@ class JobHistoryServer:
         return sorted(self._entries)
 
     def summary(self, app_id: str) -> dict:
+        """One-stop answer to "what happened to my job" — status, attempts,
+        logs, and (for failures) per-task attribution + retry advice."""
         e = self._entries[app_id]
+        diags = e.result.diagnostics
         return {
             "app_id": app_id,
             "name": e.job.name,
@@ -41,7 +45,27 @@ class JobHistoryServer:
             "attempts": len(e.result.attempts),
             "ui_url": e.result.ui_url,
             "task_logs": sorted(e.result.task_logs),
+            "diagnostics": {k: d.to_dict() for k, d in sorted(diags.items())},
+            "failure_reasons": e.result.failure_summary(),
+            "retry_advice": self._retry_advice(e.result),
         }
+
+    @staticmethod
+    def _retry_advice(result: JobResult) -> str:
+        if result.succeeded:
+            return ("recovered after retries; see diagnostics for the "
+                    "transient causes" if len(result.attempts) > 1 else "")
+        classes = {d.classification for d in result.diagnostics.values()}
+        if FailureClass.FATAL_USER in classes:
+            return ("fix the program: a FATAL_USER failure (bad import/"
+                    "attribute/name) can never succeed on retry — the AM "
+                    "failed fast instead of burning attempts")
+        if classes == {FailureClass.INFRA}:
+            return ("cluster-side failure (preemption/container/executor); "
+                    "resubmit or pick a less contended queue")
+        return ("transient failures exhausted the attempt budget; raise "
+                "tony.application.max-attempts or investigate the flakiness "
+                "in the task logs")
 
 
 @dataclass
@@ -78,6 +102,34 @@ class MetricsAnalyzer:
                 "*", "flaky",
                 f"job needed {len(result.attempts)} attempts; check task logs "
                 f"for transient failures"))
+        out.extend(self._failure_suggestions(result))
+        return out
+
+    @staticmethod
+    def _failure_suggestions(result: JobResult) -> list[Suggestion]:
+        """Per-classification retry advice from the diagnostics subsystem."""
+        out: list[Suggestion] = []
+        by_class: dict[FailureClass, list[str]] = {}
+        for key, d in sorted(result.diagnostics.items()):
+            by_class.setdefault(d.classification, []).append(
+                f"{key}: {d.exception_type or 'exit'} {d.message}".strip())
+        if FailureClass.FATAL_USER in by_class:
+            out.append(Suggestion(
+                "*", "user_error",
+                "FATAL_USER failure — retries were skipped because the "
+                "program itself is broken: "
+                + "; ".join(by_class[FailureClass.FATAL_USER])))
+        if FailureClass.INFRA in by_class:
+            out.append(Suggestion(
+                "*", "infra",
+                "INFRA failures (preemption/container/executor): "
+                + "; ".join(by_class[FailureClass.INFRA])))
+        if FailureClass.TRANSIENT in by_class and not result.succeeded:
+            out.append(Suggestion(
+                "*", "transient_exhausted",
+                "TRANSIENT failures exhausted the attempt budget; consider "
+                "raising tony.application.max-attempts: "
+                + "; ".join(by_class[FailureClass.TRANSIENT])))
         return out
 
 

@@ -72,6 +72,9 @@ class Container:
     resource: Resource
     state: ContainerState = ContainerState.ALLOCATED
     exit_status: int | None = None
+    # RM-side reason for a non-clean end state (e.g. which queue preempted
+    # this container) — the AM folds it into the task's failure attribution
+    diagnostics: str | None = None
 
     @staticmethod
     def fresh(node_id: str, resource: Resource) -> "Container":

@@ -136,7 +136,8 @@ class ResourceManager:
 
     def release(self, container_id: str,
                 state: ContainerState = ContainerState.RELEASED,
-                exit_status: int | None = None) -> None:
+                exit_status: int | None = None,
+                diagnostics: str | None = None) -> None:
         with self._lock:
             c = self._containers.get(container_id)
             if c is None or c.state in (ContainerState.RELEASED,
@@ -150,6 +151,8 @@ class ResourceManager:
             self.queues[queue].used = self.queues[queue].used - c.resource
             c.state = state
             c.exit_status = exit_status
+            if diagnostics is not None:
+                c.diagnostics = diagnostics
             self.events.emit("rm", "container_released",
                              container_id=container_id, state=state.value)
 
@@ -200,7 +203,9 @@ class ResourceManager:
                 if self._gang_fits(request, count):
                     break
                 self.release(victim.container_id, ContainerState.PREEMPTED,
-                             exit_status=137)
+                             exit_status=137,
+                             diagnostics=f"preempted to satisfy queue "
+                                         f"{my_queue!r} (capacity scheduler)")
                 victim.state = ContainerState.PREEMPTED
                 self.events.emit("rm", "container_preempted",
                                  container_id=victim.container_id,

@@ -19,6 +19,12 @@ from typing import Any, Callable
 
 from repro.core.cluster_spec import TaskAddress, task_env
 from repro.core.events import EventLog
+from repro.core.failures import (
+    EXIT_EXECUTOR_ERROR,
+    FailureClass,
+    TaskDiagnostics,
+    diagnose_exception,
+)
 from repro.core.resources import Container, PortAllocator
 
 # MLProgram: (env, job_context) -> exit code
@@ -99,6 +105,7 @@ class TaskExecutor:
         self.is_chief_worker = is_chief_worker
         self.task_id = f"{task_type}:{index}"
         self.exit_status: int | None = None
+        self.diagnostics: TaskDiagnostics | None = None
         self.log_lines: list[str] = []
         self.metrics: dict[str, float] = {}
         self._cluster_spec_ready = threading.Event()
@@ -157,6 +164,11 @@ class TaskExecutor:
                     self.log(f"child crashed: {type(e).__name__}: {e}")
                     self.log(traceback.format_exc())
                     result["exit"] = 1
+                    # capture the failure for the AM: type, message and the
+                    # full formatted traceback, pre-classified
+                    diag = diagnose_exception(self.task_id, e)
+                    result["diag"] = diag
+                    self.ctx.shared[f"diag:{self.task_id}"] = diag.to_dict()
 
             child_t = threading.Thread(target=child, name=f"ml-{self.task_id}",
                                        daemon=True)
@@ -179,13 +191,20 @@ class TaskExecutor:
                 child_t.join(self.HEARTBEAT_INTERVAL_S)
 
             self.exit_status = int(result.get("exit", 0))
+            self.diagnostics = result.get("diag")
             self.metrics = dict(self.ctx.shared.get(f"metrics:{self.task_id}", {}))
         except Exception as e:  # noqa: BLE001
             self.log(f"executor error: {e}")
-            self.exit_status = 2
+            self.exit_status = EXIT_EXECUTOR_ERROR
+            self.diagnostics = TaskDiagnostics(
+                task_id=self.task_id, exit_status=EXIT_EXECUTOR_ERROR,
+                classification=FailureClass.INFRA,
+                exception_type=type(e).__name__, message=str(e),
+                traceback=traceback.format_exc())
         finally:
             self.events.emit(src, "task_finished", exit=self.exit_status)
-            self.am.report_exit(self.task_id, self.exit_status or 0)
+            self.am.report_exit(self.task_id, self.exit_status or 0,
+                                diagnostics=self.diagnostics)
 
 
 class ApplicationMasterProtocol:
@@ -198,7 +217,8 @@ class ApplicationMasterProtocol:
     def heartbeat(self, task_id: str) -> None:
         raise NotImplementedError
 
-    def report_exit(self, task_id: str, status: int) -> None:
+    def report_exit(self, task_id: str, status: int,
+                    diagnostics: TaskDiagnostics | None = None) -> None:
         raise NotImplementedError
 
 

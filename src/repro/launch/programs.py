@@ -25,6 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.core.task_executor import JobContext
 from repro.data import make_dataset
 from repro.distributed.steps import init_train_state, make_train_fn
+from repro.launch.mesh import make_mesh_compat, set_mesh
 from repro.optim import AdamWConfig
 
 
@@ -37,8 +38,7 @@ def _local_mesh(strategy: str):
         if n % m == 0 and m <= n:
             model = m
             break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n // model, model), ("data", "model"))
 
 
 def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
@@ -88,7 +88,7 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
         data = make_dataset(data_kind, batch_size, seq_len, cfg.vocab_size,
                             path=data_path, seed=data_seed)
         ckpt = Checkpointer(ckpt_dir)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             train_fn, _ = make_train_fn(
                 cfg, mesh, strategy, opt=AdamWConfig(lr=lr, weight_decay=0.0))
             state = init_train_state(cfg, jax.random.PRNGKey(0))

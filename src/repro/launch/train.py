@@ -17,6 +17,7 @@ from repro.core import (
     MetricsAnalyzer,
     TonYClient,
     YarnLikeBackend,
+    format_failure_report,
     job_spec_from_props,
     make_cluster,
 )
@@ -75,6 +76,7 @@ def main() -> None:
     result = client.run_and_wait(job, prog)
     history = JobHistoryServer()
     history.record(job, result)
+    summary = history.summary(result.app_id)
     print(json.dumps({
         "status": result.final_status,
         "attempts": len(result.attempts),
@@ -82,8 +84,12 @@ def main() -> None:
         "first_loss": steps_log[0][1] if steps_log else None,
         "final_loss": steps_log[-1][1] if steps_log else None,
         "suggestions": [s.message for s in MetricsAnalyzer().analyze(job, result)],
+        "failure_reasons": summary["failure_reasons"],
+        "retry_advice": summary["retry_advice"],
         "ckpt_dir": ckpt_dir,
     }, indent=2))
+    if not result.succeeded:
+        print(format_failure_report(result))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,242 @@
+"""Failure-diagnostics + retry-policy subsystem tests: classification,
+fail-fast on user errors, backoff on transient faults, heartbeat-timeout
+attribution, and the history server's "why did my job fail" answer."""
+import time
+
+from repro.core import (
+    ApplicationMaster,
+    FailureClass,
+    JobHistoryServer,
+    MetricsAnalyzer,
+    RetryPolicy,
+    TonYClient,
+    YarnLikeBackend,
+    classify_exception,
+    classify_exit,
+    format_failure_report,
+    job_spec_from_props,
+    make_cluster,
+)
+from repro.core.failures import (
+    diagnose_exception,
+    diagnose_heartbeat_timeout,
+)
+
+
+def _job(workers=2, ps=1, attempts=3):
+    props = {
+        "tony.application.name": "diag",
+        "tony.application.max-attempts": str(attempts),
+        "tony.worker.instances": str(workers),
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    }
+    if ps:
+        props.update({
+            "tony.ps.instances": str(ps),
+            "tony.ps.memory": "512",
+            "tony.ps.node-label": "highmem",
+        })
+    return job_spec_from_props(props)
+
+
+# ----------------------------------------------------------------------
+# Classification units
+
+
+def test_classify_user_errors_fatal():
+    assert classify_exception(ImportError("no module")) is FailureClass.FATAL_USER
+    assert classify_exception(ModuleNotFoundError("x")) is FailureClass.FATAL_USER
+    assert classify_exception(AttributeError("x")) is FailureClass.FATAL_USER
+    assert classify_exception(NameError("x")) is FailureClass.FATAL_USER
+    assert classify_exception(RuntimeError("flaky")) is FailureClass.TRANSIENT
+    assert classify_exception(TimeoutError("slow")) is FailureClass.TRANSIENT
+
+
+def test_classify_exit_codes():
+    assert classify_exit(137) is FailureClass.INFRA       # preempted
+    assert classify_exit(2) is FailureClass.INFRA         # executor error
+    assert classify_exit(143) is FailureClass.TRANSIENT   # AM teardown
+    assert classify_exit(1) is FailureClass.TRANSIENT
+
+
+def test_diagnose_exception_captures_traceback():
+    try:
+        raise ImportError("No module named 'nonexistent_dep'")
+    except ImportError as e:
+        d = diagnose_exception("worker:0", e)
+    assert d.exception_type == "ImportError"
+    assert "nonexistent_dep" in d.message
+    assert "Traceback" in d.traceback and "ImportError" in d.traceback
+    assert d.classification is FailureClass.FATAL_USER
+    assert d.to_dict()["classification"] == "FATAL_USER"
+
+
+def test_diagnose_heartbeat_timeout_is_transient():
+    d = diagnose_heartbeat_timeout("ps:0", 5.0)
+    assert d.classification is FailureClass.TRANSIENT
+    assert d.exception_type == "HeartbeatTimeout"
+    assert "5s" in d.message
+
+
+# ----------------------------------------------------------------------
+# RetryPolicy units (fake clock)
+
+
+def test_retry_policy_exponential_backoff_capped():
+    pol = RetryPolicy(max_attempts=5, base_backoff_s=0.1,
+                      backoff_multiplier=2.0, max_backoff_s=0.25)
+    assert pol.backoff_for(1) == 0.1
+    assert pol.backoff_for(2) == 0.2
+    assert pol.backoff_for(3) == 0.25  # capped
+    d = pol.decide(1, {FailureClass.TRANSIENT})
+    assert d.retry and d.backoff_s == 0.1
+    d = pol.decide(2, {FailureClass.INFRA})
+    assert d.retry and d.backoff_s == 0.2
+
+
+def test_retry_policy_fail_fast_and_budget():
+    pol = RetryPolicy(max_attempts=3)
+    fatal = pol.decide(1, {FailureClass.FATAL_USER, FailureClass.TRANSIENT})
+    assert not fatal.retry and "fail-fast" in fatal.reason
+    exhausted = pol.decide(3, {FailureClass.TRANSIENT})
+    assert not exhausted.retry and "budget" in exhausted.reason
+
+
+def test_retry_policy_injectable_clock():
+    sleeps = []
+    pol = RetryPolicy(max_attempts=3, base_backoff_s=0.5).with_clock(sleeps.append)
+    pol.sleep(pol.backoff_for(1))
+    assert sleeps == [0.5]  # no real time passed
+
+
+# ----------------------------------------------------------------------
+# Integration: fail-fast on FATAL_USER (acceptance criterion)
+
+
+def _import_error_program(env, ctx):
+    ctx.rendezvous(timeout=10)
+    if env["TASK_TYPE"] == "worker" and env["TASK_INDEX"] == "0":
+        raise ImportError("No module named 'nonexistent_dep'")
+    return 0
+
+
+def test_import_error_fails_fast_with_diagnostics():
+    rm = make_cluster()
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(
+        _job(attempts=3), _import_error_program, timeout=60)
+    assert res.final_status == "FAILED"
+    assert len(res.attempts) == 1          # fail-fast: no retries burned
+    d = res.diagnostics["a1/worker:0"]
+    assert d.classification is FailureClass.FATAL_USER
+    assert d.exception_type == "ImportError"
+    assert "nonexistent_dep" in d.message
+    assert d.traceback and "ImportError" in d.traceback
+    # the event log shows the classified failure and the abandoned retry
+    assert rm.events.count("task_failed") >= 1
+    assert rm.events.count("attempt_classified") == 1
+    assert rm.events.count("retry_scheduled") == 0
+    abandoned = rm.events.of_kind("retry_abandoned")
+    assert len(abandoned) == 1 and "fail-fast" in abandoned[0].payload["reason"]
+    assert "FATAL_USER" in rm.events.of_kind(
+        "attempt_classified")[0].payload["classes"]
+    # report formatting carries the traceback to the user
+    report = format_failure_report(res)
+    assert "a1/worker:0" in report and "ImportError" in report
+
+
+def test_transient_failure_retries_with_backoff_events():
+    rm = make_cluster()
+    sleeps = []
+    pol = RetryPolicy(max_attempts=3, base_backoff_s=0.01).with_clock(sleeps.append)
+    calls = {"n": 0}
+
+    def flaky(env, ctx):
+        ctx.rendezvous(timeout=10)
+        if env["TASK_TYPE"] == "worker" and env["TASK_INDEX"] == "0":
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("injected transient fault")
+        return 0
+
+    client = TonYClient(YarnLikeBackend(rm, retry_policy=pol))
+    res = client.run_and_wait(_job(), flaky, timeout=60)
+    assert res.succeeded and len(res.attempts) == 2
+    d = res.diagnostics["a1/worker:0"]
+    assert d.classification is FailureClass.TRANSIENT
+    assert "injected transient fault" in d.traceback
+    sched = rm.events.of_kind("retry_scheduled")
+    assert len(sched) == 1
+    assert sched[0].payload["backoff_s"] == pol.backoff_for(1)
+    assert sleeps == [pol.backoff_for(1)]   # backoff ran on the fake clock
+
+
+def test_allocation_failure_classified_transient():
+    rm = make_cluster(num_gpu_nodes=1, gpus_per_node=1)
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(
+        _job(workers=8, attempts=1), lambda env, ctx: 0, timeout=60)
+    assert not res.succeeded
+    d = res.diagnostics["a1/__allocation__"]
+    assert d.classification is FailureClass.TRANSIENT
+    assert d.exception_type == "AllocationError"
+
+
+# ----------------------------------------------------------------------
+# Heartbeat timeout -> classified TRANSIENT failure
+
+
+def test_heartbeat_timeout_classified_transient():
+    rm = make_cluster()
+    job = _job(workers=2, ps=0, attempts=1)
+    app_id = rm.submit_application(job.name, job.queue)
+
+    def slow(env, ctx):
+        ctx.rendezvous(timeout=10)
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline and not ctx.cancel.is_set():
+            time.sleep(0.01)
+        return 0
+
+    am = ApplicationMaster(rm, app_id, job, slow,
+                           retry_policy=RetryPolicy(max_attempts=1))
+    am.heartbeat_timeout_s = 0.25
+    # drop worker:0's heartbeats (a hung task / lost node)
+    real_heartbeat = ApplicationMaster.heartbeat
+
+    def dropping(task_id):
+        if task_id != "worker:0":
+            real_heartbeat(am, task_id)
+
+    am.heartbeat = dropping
+    res = am.run()
+    assert not res.succeeded
+    d = res.diagnostics["a1/worker:0"]
+    assert d.exception_type == "HeartbeatTimeout"
+    assert d.classification is FailureClass.TRANSIENT
+    assert rm.events.count("heartbeat_lost") == 1
+    assert "worker:0" in res.attempts[0].failed_tasks
+
+
+# ----------------------------------------------------------------------
+# History server + analyzer surface the attribution
+
+
+def test_history_summary_answers_why_job_failed():
+    rm = make_cluster()
+    job = _job(attempts=3)
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(
+        job, _import_error_program, timeout=60)
+    hist = JobHistoryServer()
+    hist.record(job, res)
+    s = hist.summary(res.app_id)
+    assert s["status"] == "FAILED"
+    assert s["diagnostics"]["a1/worker:0"]["exception_type"] == "ImportError"
+    assert s["diagnostics"]["a1/worker:0"]["traceback"]
+    assert any("FATAL_USER" in r for r in s["failure_reasons"])
+    assert "fix the program" in s["retry_advice"]
+    kinds = {g.kind for g in MetricsAnalyzer().analyze(job, res)}
+    assert "user_error" in kinds
+    # the event log's failure timeline is non-empty and ordered
+    timeline = rm.events.failure_timeline()
+    assert [e.kind for e in timeline][:2] == ["task_failed", "attempt_classified"]

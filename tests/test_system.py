@@ -60,6 +60,13 @@ def test_e2e_fault_tolerance_restores_from_checkpoint(tmp_path):
     assert res.succeeded
     assert len(res.attempts) == 2
     assert "worker:0" in res.attempts[0].failed_tasks
+    # the crash was attributed: real traceback + TRANSIENT classification,
+    # and the retry that saved the job is visible in the event log
+    diag = res.diagnostics["a1/worker:0"]
+    assert diag.classification.value == "TRANSIENT"
+    assert diag.exception_type == "RuntimeError"
+    assert "injected transient failure" in diag.traceback
+    assert rm.events.count("retry_scheduled") == 1
     # attempt 2 resumed at 10 (the checkpoint), not 0
     restart_points = [s for i, s in enumerate(seen_steps[1:], 1)
                       if s <= seen_steps[i - 1]]
