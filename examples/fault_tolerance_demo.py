@@ -1,15 +1,26 @@
-"""Fault-tolerance demo (paper §2.2): a worker dies mid-training; the AM
-classifies the failure (TRANSIENT), schedules a retry with backoff, tears the
-attempt down, negotiates fresh containers, broadcasts a NEW cluster spec, and
-the relaunched job restores from the last checkpoint.
+"""Fault-tolerance demo (paper §2.2), driven by the chaos harness: a seeded
+FaultPlan OOMs the chief worker at step 5 on its first two attempts. The AM
+classifies each failure (INFRA, oom), schedules retries with backoff, resumes
+every relaunch from the last committed checkpoint (step 3, not step 0), and
+after the second OOM on the same host the RM blacklists that node — attempt 3
+is placed elsewhere and trains to completion.
 
     PYTHONPATH=src python examples/fault_tolerance_demo.py
+    CHAOS_SEED=99 PYTHONPATH=src python examples/fault_tolerance_demo.py
 """
+import os
 import tempfile
 
 from repro.configs import get_config
 from repro.core import (
+    EventLog,
     FailureClass,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    JobHistoryServer,
+    NodeHealthTracker,
     TonYClient,
     YarnLikeBackend,
     job_spec_from_props,
@@ -17,15 +28,25 @@ from repro.core import (
 )
 from repro.launch.programs import make_train_program
 
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "1234"))
+
 
 def main() -> None:
-    rm = make_cluster()
+    # one seeded fault plan: OOM the chief at step 5, twice (attempts 1+2)
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.OOM, task="worker:0", at_step=5, count=2))
+    events = EventLog()
+    health = NodeHealthTracker(threshold=2, parole_s=600.0, events=events)
+    rm = make_cluster(event_log=events,
+                      chaos=FaultInjector(plan, events=events),
+                      health=health)
     client = TonYClient(YarnLikeBackend(rm))
     cfg = get_config("tony-paper-mlp").replace(d_model=128, num_heads=2,
                                                num_kv_heads=2, d_ff=256,
                                                vocab_size=512)
     job = job_spec_from_props({
         "tony.application.name": "fault-demo",
+        "tony.application.max-attempts": "3",
         "tony.worker.instances": "2",
         "tony.worker.memory": "4096",
         "tony.worker.gpus": "1",
@@ -34,35 +55,56 @@ def main() -> None:
 
     trace = []
     program = make_train_program(
-        cfg, steps=24, batch_size=8, seq_len=32,
-        ckpt_dir=tempfile.mkdtemp(prefix="fault-demo-"), ckpt_every=6,
-        fail_at=(1, 15),  # crash on attempt 1 at step 15 (ckpt exists at 12)
+        cfg, steps=12, batch_size=8, seq_len=32,
+        ckpt_dir=tempfile.mkdtemp(prefix="fault-demo-"), ckpt_every=3,
         on_step=lambda s, m: trace.append((s, round(m["loss"], 3))))
 
     result = client.run_and_wait(job, program)
 
+    print(f"chaos plan (seed={CHAOS_SEED}):",
+          [f"{s.kind} {s.task}@step{s.at_step} x{s.count}" for s in plan.faults])
     print("attempts:", len(result.attempts))
-    print("attempt 1 failed tasks:", result.attempts[0].failed_tasks)
 
-    # the diagnostics subsystem attributed the crash before retrying
-    diag = result.diagnostics["a1/worker:0"]
-    print(f"attempt 1 diagnosis: [{diag.classification.value}] "
-          f"{diag.exception_type}: {diag.message}")
-    assert diag.classification is FailureClass.TRANSIENT
-    assert "injected transient failure" in diag.traceback
-    retry_ev = rm.events.of_kind("retry_scheduled")[0]
+    # the diagnostics subsystem attributed both OOMs before retrying
+    for a in (1, 2):
+        diag = result.diagnostics[f"a{a}/worker:0"]
+        print(f"attempt {a} diagnosis: {diag.describe()}")
+        assert diag.classification is FailureClass.INFRA and diag.oom
+    retry_ev = events.of_kind("retry_scheduled")[0]
     print(f"retry scheduled with backoff_s={retry_ev.payload['backoff_s']}")
 
+    # checkpoint-aware recovery: both relaunches resumed from step 3
+    print("resumed attempts (attempt -> resume_step):",
+          dict(result.resumed_attempts))
+    assert result.resumed_attempts == {2: 3, 3: 3}
+    assert events.count("attempt_resumed") == 2
     steps = [s for s, _ in trace]
     resume = next(s for i, s in enumerate(steps[1:], 1) if s <= steps[i - 1])
-    print(f"attempt 2 resumed from checkpoint at step {resume} (not step 0)")
-    print("loss trace around the failure:",
-          [t for t in trace if 10 <= t[0] <= 18])
-    print("containers allocated total:",
-          rm.events.count("container_allocated"), "(2 per attempt)")
-    assert result.succeeded and len(result.attempts) == 2 and resume == 12
+    print(f"training resumed from checkpoint at step {resume} (not step 0)")
+    assert resume == 3
+
+    # node blacklisting: two OOMs on one host tipped it out of placement
+    bad = result.attempts[0].nodes["worker:0"]
+    bl = events.of_kind("node_blacklisted")
+    assert len(bl) == 1 and bl[0].payload["node"] == bad
+    assert result.attempts[1].nodes["worker:0"] == bad       # struck twice
+    assert bad not in result.attempts[2].nodes.values()      # then avoided
+    assert result.blacklisted_nodes == [bad]
+    print(f"node {bad} blacklisted after 2 OOMs; attempt 3 placed on",
+          result.attempts[2].nodes["worker:0"])
+
+    assert result.succeeded and len(result.attempts) == 3
+    print("loss trace around the failures:",
+          [t for t in trace if 3 <= t[0] <= 6])
+
+    # the history server surfaces the whole recovery story in one place
+    history = JobHistoryServer()
+    history.record(job, result)
+    summary = history.summary(result.app_id)
+    assert summary["blacklisted_nodes"] == [bad]
+    assert summary["resumed_attempts"] == {2: 3, 3: 3}
     print("failure timeline kinds:",
-          [e.kind for e in rm.events.failure_timeline()])
+          [e.kind for e in events.failure_timeline()])
     print("OK")
 
 

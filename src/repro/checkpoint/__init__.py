@@ -1,6 +1,8 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
     Checkpointer,
+    is_committed,
     latest_step,
     restore_pytree,
     save_pytree,
+    step_dir,
 )

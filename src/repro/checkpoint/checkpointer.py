@@ -1,19 +1,33 @@
 """Checkpointing — the fault-tolerance contract between TonY and the ML job.
 
-Pytrees are flattened to path-keyed npz archives; writes are atomic
-(tmp + rename) so a mid-write task kill never corrupts the latest checkpoint,
-which is exactly what the AM's relaunch path relies on.
+Pytrees are flattened to path-keyed npz archives. Each checkpoint is a
+``step_<n>`` directory holding the arrays plus a ``COMMIT`` marker written
+last — a step without its marker is half-written (the writer was killed
+mid-checkpoint, exactly the situation the chaos harness creates on purpose)
+and is invisible to ``latest_step`` / ``restore`` / garbage collection.
+Directory staging + atomic rename means a mid-write kill never corrupts the
+latest checkpoint, which is what the AM's ``resume_step`` relaunch path
+relies on.
+
+The pre-PR-7 flat layout (``ckpt_<n>.npz``, atomic by rename alone) is still
+readable so existing checkpoint directories keep working.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
+import shutil
 import tempfile
 
 import jax
 import numpy as np
 
 _SEP = "|"
+_STEP_DIR = re.compile(r"step_(\d{8})")
+_LEGACY_FILE = re.compile(r"ckpt_(\d{8})\.npz")
+COMMIT_MARKER = "COMMIT"
+ARRAYS_FILE = "arrays.npz"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -24,27 +38,62 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return flat
 
 
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def is_committed(directory: str, step: int) -> bool:
+    """A step counts only once its COMMIT marker exists (or it is a legacy
+    flat file, which was atomic by rename)."""
+    if os.path.exists(os.path.join(step_dir(directory, step), COMMIT_MARKER)):
+        return True
+    return os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+
+
 def save_pytree(tree, directory: str, step: int) -> str:
+    """Write one checkpoint: stage into a tmp dir, add the COMMIT marker,
+    atomically rename into place. A concurrent reader never observes a
+    committed-but-incomplete step."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
-    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    final = step_dir(directory, step)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=f".tmp-step_{step:08d}-")
     try:
-        with os.fdopen(fd, "wb") as f:
+        with open(os.path.join(tmp, ARRAYS_FILE), "wb") as f:
             np.savez(f, **flat)
+        with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
+            json.dump({"step": step, "arrays": len(flat)}, f)
+        if os.path.isdir(final):          # re-checkpointing the same step
+            shutil.rmtree(final)
         os.replace(tmp, final)
     finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
     return final
+
+
+def _committed_steps(directory: str) -> list[int]:
+    """All fully-written steps, tolerating junk: non-step entries, staging
+    dirs and half-written (marker-less) steps are skipped, not errors."""
+    steps = set()
+    try:
+        entries = os.listdir(directory)
+    except OSError:
+        return []
+    for entry in entries:
+        if (m := _STEP_DIR.fullmatch(entry)):
+            if os.path.exists(os.path.join(directory, entry, COMMIT_MARKER)):
+                steps.add(int(m.group(1)))
+        elif (m := _LEGACY_FILE.fullmatch(entry)):
+            steps.add(int(m.group(1)))
+    return sorted(steps)
 
 
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.fullmatch(r"ckpt_(\d{8})\.npz", f))]
-    return max(steps) if steps else None
+    steps = _committed_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_pytree(template, directory: str, step: int | None = None):
@@ -53,7 +102,13 @@ def restore_pytree(template, directory: str, step: int | None = None):
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    path = os.path.join(step_dir(directory, step), ARRAYS_FILE)
+    if not (os.path.exists(path) and is_committed(directory, step)):
+        legacy = os.path.join(directory, f"ckpt_{step:08d}.npz")
+        if not os.path.exists(legacy):
+            raise FileNotFoundError(
+                f"no committed checkpoint for step {step} in {directory}")
+        path = legacy
     with np.load(path) as data:
         flat = dict(data)
     keys = []
@@ -86,9 +141,21 @@ class Checkpointer:
         return latest_step(self.directory)
 
     def _gc(self) -> None:
+        """Drop committed checkpoints beyond ``keep``, oldest first.
+
+        Tolerates concurrent/partial state: entries that aren't ``step_*``
+        (user files, staging dirs), half-written steps (no COMMIT marker)
+        and races with other deleters are all skipped, never crashes.
+        """
         if not os.path.isdir(self.directory):
             return
-        ckpts = sorted(f for f in os.listdir(self.directory)
-                       if re.fullmatch(r"ckpt_\d{8}\.npz", f))
-        for f in ckpts[:-self.keep]:
-            os.unlink(os.path.join(self.directory, f))
+        for step in _committed_steps(self.directory)[:-self.keep]:
+            for victim in (step_dir(self.directory, step),
+                           os.path.join(self.directory, f"ckpt_{step:08d}.npz")):
+                try:
+                    if os.path.isdir(victim):
+                        shutil.rmtree(victim)
+                    elif os.path.exists(victim):
+                        os.unlink(victim)
+                except OSError:
+                    pass  # lost a race with another gc/writer — fine

@@ -5,6 +5,15 @@ Client -> (archive) -> scheduler backend -> ApplicationMaster -> containers
 exit statuses, with relaunch-on-failure and history/metrics collection.
 """
 from repro.core.appmaster import ApplicationMaster, AttemptReport, JobResult  # noqa: F401
+from repro.core.chaos import (  # noqa: F401
+    NO_CHAOS,
+    ChaosKill,
+    ChaosOOM,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+)
 from repro.core.client import (  # noqa: F401
     JobHandle,
     TonYClient,
@@ -13,7 +22,12 @@ from repro.core.client import (  # noqa: F401
 )
 from repro.core.cluster_spec import build_cluster_spec, task_env  # noqa: F401
 from repro.core.config import job_spec_from_props, parse_tony_xml, to_tony_xml  # noqa: F401
-from repro.core.events import FAILURE_EVENT_KINDS, Event, EventLog  # noqa: F401
+from repro.core.events import (  # noqa: F401
+    FAILURE_EVENT_KINDS,
+    RECOVERY_EVENT_KINDS,
+    Event,
+    EventLog,
+)
 from repro.core.failures import (  # noqa: F401
     FailureClass,
     RetryDecision,
@@ -21,6 +35,7 @@ from repro.core.failures import (  # noqa: F401
     TaskDiagnostics,
     classify_exception,
     classify_exit,
+    is_oom_signature,
 )
 from repro.core.history import JobHistoryServer, MetricsAnalyzer  # noqa: F401
 from repro.core.resources import (  # noqa: F401
@@ -31,6 +46,11 @@ from repro.core.resources import (  # noqa: F401
     Resource,
     TaskSpec,
 )
-from repro.core.rm import AllocationError, ResourceManager, make_cluster  # noqa: F401
+from repro.core.rm import (  # noqa: F401
+    AllocationError,
+    NodeHealthTracker,
+    ResourceManager,
+    make_cluster,
+)
 from repro.core.task_executor import JobContext, TaskExecutor  # noqa: F401
 from repro.core.workflow import Workflow, WorkflowNode  # noqa: F401

@@ -13,6 +13,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.core.chaos import NO_CHAOS, FaultInjector
 from repro.core.cluster_spec import TaskAddress, build_cluster_spec
 from repro.core.events import EventLog
 from repro.core.failures import (
@@ -51,6 +52,14 @@ class AttemptReport:
     # task_id -> attributed failure (exception type/message/traceback +
     # classification) for every entry in failed_tasks
     diagnostics: dict[str, TaskDiagnostics] = field(default_factory=dict)
+    # checkpoint step this attempt was told to restore from (None = cold
+    # start) and the last checkpoint it *completed* — the AM threads the
+    # latter into the next attempt's resume_step so retries don't retrain
+    # from step 0
+    resume_step: int | None = None
+    checkpoint_step: int | None = None
+    # task_id -> node that hosted it (failure attribution + blacklisting)
+    nodes: dict[str, str] = field(default_factory=dict)
 
 
 @dataclass
@@ -63,10 +72,18 @@ class JobResult:
     metrics: dict[str, dict[str, float]]
     # "a<attempt>/<task_id>" -> TaskDiagnostics, across every attempt
     diagnostics: dict[str, TaskDiagnostics] = field(default_factory=dict)
+    # nodes the RM blacklisted while this job ran (NodeHealthTracker)
+    blacklisted_nodes: list[str] = field(default_factory=list)
 
     @property
     def succeeded(self) -> bool:
         return self.final_status == "SUCCEEDED"
+
+    @property
+    def resumed_attempts(self) -> dict[int, int]:
+        """attempt number -> checkpoint step it resumed from (warm starts)."""
+        return {r.attempt: r.resume_step for r in self.attempts
+                if r.resume_step is not None}
 
     def failure_summary(self) -> list[str]:
         """Human-readable one-liner per attributed failure, in attempt order."""
@@ -84,7 +101,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
                  ml_program: MLProgram, events: EventLog | None = None,
                  ports: PortAllocator | None = None,
                  workdir: str = "",
-                 retry_policy: RetryPolicy | None = None):
+                 retry_policy: RetryPolicy | None = None,
+                 chaos: FaultInjector | None = None):
         self.rm = rm
         self.app_id = app_id
         self.job = job
@@ -92,6 +110,9 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self.events = events or rm.events
         self.ports = ports or PortAllocator()
         self.workdir = workdir
+        # one injector threads through RM -> AM -> executors -> ML program;
+        # default to the RM's (NO_CHAOS unless a chaos plan was installed)
+        self.chaos = chaos or getattr(rm, "chaos", None) or NO_CHAOS
         self.retry_policy = retry_policy or RetryPolicy(
             max_attempts=job.max_app_attempts)
         self.heartbeat_timeout_s = HEARTBEAT_TIMEOUT_S
@@ -143,17 +164,23 @@ class ApplicationMaster(ApplicationMasterProtocol):
         attempts: list[AttemptReport] = []
         diagnostics: dict[str, TaskDiagnostics] = {}
         attempt = 0
+        resume_step: int | None = None
         while True:
             attempt += 1
-            report = self._run_attempt(attempt)
+            report = self._run_attempt(attempt, resume_step)
             attempts.append(report)
+            # checkpoint-aware recovery: the next attempt restores from the
+            # deepest checkpoint any attempt completed, not from step 0
+            if report.checkpoint_step is not None:
+                resume_step = max(resume_step or 0, report.checkpoint_step)
             for task_id, diag in report.diagnostics.items():
                 diagnostics[f"a{attempt}/{task_id}"] = diag
             if not report.failed_tasks:
                 self.rm.set_app_state(self.app_id, "FINISHED")
                 return JobResult(self.app_id, "SUCCEEDED", attempts,
                                  self.ui_url, self.task_logs, self.metrics,
-                                 diagnostics)
+                                 diagnostics,
+                                 blacklisted_nodes=self.rm.health.blacklisted())
             self.events.emit("am", "attempt_failed", attempt=attempt,
                              failed=report.failed_tasks)
             classes = {d.classification for d in report.diagnostics.values()}
@@ -179,7 +206,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
             policy.sleep(backoff)
         self.rm.set_app_state(self.app_id, "FAILED")
         return JobResult(self.app_id, "FAILED", attempts, self.ui_url,
-                         self.task_logs, self.metrics, diagnostics)
+                         self.task_logs, self.metrics, diagnostics,
+                         blacklisted_nodes=self.rm.health.blacklisted())
 
     # ------------------------------------------------------------------
     NEGOTIATION_TIMEOUT_S = 5.0
@@ -226,7 +254,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
                         count=tspec.instances)
                 time.sleep(self.NEGOTIATION_BACKOFF_S)
 
-    def _run_attempt(self, attempt: int) -> AttemptReport:
+    def _run_attempt(self, attempt: int,
+                     resume_step: int | None = None) -> AttemptReport:
         t0 = time.monotonic()
         self._registrations.clear()
         self._exits.clear()
@@ -245,10 +274,19 @@ class ApplicationMaster(ApplicationMasterProtocol):
                              reason=diag.message)
             return AttemptReport(attempt, failed_tasks=["__allocation__"],
                                  duration_s=time.monotonic() - t0,
-                                 diagnostics={"__allocation__": diag})
+                                 diagnostics={"__allocation__": diag},
+                                 resume_step=resume_step)
 
-        ctx = JobContext(world_size=self._world_size, workdir=self.workdir)
+        ctx = JobContext(world_size=self._world_size, workdir=self.workdir,
+                         chaos=self.chaos)
         ctx.shared["attempt"] = attempt
+        if resume_step is not None:
+            # the relaunched program restores from this checkpoint instead
+            # of reinitializing (checkpoint/checkpointer.py is its side of
+            # the contract)
+            ctx.shared["resume_step"] = resume_step
+            self.events.emit("am", "attempt_resumed", attempt=attempt,
+                             resume_step=resume_step)
         executors: list[TaskExecutor] = []
         worker_like = "worker" if "worker" in containers else sorted(containers)[0]
         for task_type, clist in sorted(containers.items()):
@@ -257,7 +295,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
                 ex = TaskExecutor(
                     task_type, idx, container, self, self.ml_program,
                     self.job.args, ctx, self.ports, self.events,
-                    is_chief_worker=(task_type == worker_like and idx == 0))
+                    is_chief_worker=(task_type == worker_like and idx == 0),
+                    chaos=self.chaos)
                 executors.append(ex)
         for ex in executors:
             ex.start()
@@ -308,12 +347,18 @@ class ApplicationMaster(ApplicationMasterProtocol):
         with self._lock:
             exits = dict(self._exits)
             exit_diags = dict(self._exit_diagnostics)
-        failed = sorted([tid for tid, s in exits.items() if s != 0]
-                        + [tid for tid in self._last_heartbeat
-                           if tid not in exits])
+        # a task that tripped the heartbeat timeout counts as failed even if
+        # its child squeaked out a clean exit after the teardown began — the
+        # node was presumed lost and the attempt was already torn down
+        # (otherwise the 143-vs-0 teardown race can mislabel the attempt)
+        failed = sorted(set(
+            [tid for tid, s in exits.items() if s != 0]
+            + [tid for tid in self._last_heartbeat if tid not in exits]
+            + list(self._stale_tasks)))
 
         # attribute every failure: a child exception beats a heartbeat
         # timeout beats a bare exit code
+        node_of = {ex.task_id: ex.container.node_id for ex in executors}
         diagnostics: dict[str, TaskDiagnostics] = {}
         for tid in failed:
             diag = (exit_diags.get(tid) or self._stale_tasks.get(tid)
@@ -322,11 +367,25 @@ class ApplicationMaster(ApplicationMasterProtocol):
             self.events.emit("am", "task_failed", attempt=attempt, task=tid,
                              classification=diag.classification.value,
                              reason=diag.describe())
+            # charge INFRA failures to the hosting node so the RM can
+            # blacklist hosts that keep killing tasks (OOM, preemption storms)
+            if tid in node_of:
+                self.rm.report_node_failure(node_of[tid], diag)
+        if not failed:
+            for node in set(node_of.values()):
+                self.rm.report_node_success(node)
 
         for clist in containers.values():
             for c in clist:
                 st = ContainerState.COMPLETED if not failed else ContainerState.FAILED
                 self.rm.release(c.container_id, st)
 
+        # the chief publishes each completed checkpoint into the shared dict;
+        # whatever survived this attempt seeds the next one's resume_step
+        ckpt_step = ctx.shared.get("ckpt_step")
         return AttemptReport(attempt, exits, spec, failed,
-                             time.monotonic() - t0, diagnostics)
+                             time.monotonic() - t0, diagnostics,
+                             resume_step=resume_step,
+                             checkpoint_step=(int(ckpt_step)
+                                              if ckpt_step is not None else None),
+                             nodes=node_of)

@@ -1,0 +1,256 @@
+"""Deterministic chaos-injection harness (paper §2.2 fault tolerance, made
+testable).
+
+TonY's fault-tolerance story — heartbeats, classified failures, retries,
+checkpoint restore, node blacklisting — is only trustworthy if faults can be
+produced *on demand and reproducibly*. This module provides that substrate:
+
+* ``FaultSpec`` / ``FaultPlan`` — a declarative, seeded plan of faults:
+  kill a task at step N, simulate an OOM, drop heartbeats for a window,
+  fail an allocation call, or preempt a container mid-attempt.
+* ``FaultInjector`` — the runtime that RM / AM / TaskExecutor / the training
+  loop consult at their natural hook points. The default (``NO_CHAOS``, an
+  injector over an empty plan) makes every hook a cheap no-op so production
+  paths pay nothing.
+
+Determinism: faults fire on explicit conditions (task pattern, attempt,
+step, elapsed time), never on ambient randomness. The seed is only used by
+``FaultPlan.random_plan`` to *generate* a plan — two generations with the
+same seed yield the same plan, so chaos CI runs are reproducible.
+
+Every fired fault emits a ``chaos_injected`` event so post-mortems can
+distinguish injected trouble from organic trouble.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable
+
+from repro.core.events import EventLog
+
+
+class FaultKind(Enum):
+    KILL_TASK = "kill_task"             # raise in the child at step N
+    OOM = "oom"                         # raise an XLA-style RESOURCE_EXHAUSTED
+    DROP_HEARTBEATS = "drop_heartbeats"  # suppress heartbeats for a window
+    FAIL_ALLOCATION = "fail_allocation"  # RM.allocate raises
+    PREEMPT = "preempt"                 # container reclaimed mid-attempt
+
+    def __str__(self) -> str:
+        return self.value
+
+
+class ChaosKill(RuntimeError):
+    """Injected task death — classified TRANSIENT like any organic crash."""
+
+
+class ChaosOOM(RuntimeError):
+    """Injected OOM. The message mimics XLA's RESOURCE_EXHAUSTED so the
+    failure-classification path (core/failures.py) detects it the same way
+    it would a real allocator failure."""
+
+
+#: The message format XLA emits when a device allocation fails; the chaos
+#: OOM uses it verbatim so detection is exercised end to end.
+OOM_MESSAGE = ("RESOURCE_EXHAUSTED: Out of memory while trying to allocate "
+               "{nbytes} bytes (chaos-injected)")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault.
+
+    ``task`` is a task-id pattern: exact (``worker:0``), type-wide
+    (``worker:*``) or any (``*``). ``attempt`` gates on the app attempt
+    (0 = any attempt). Step-gated kinds (KILL_TASK, OOM) fire when the
+    training loop reaches ``at_step``; time-gated kinds (DROP_HEARTBEATS,
+    PREEMPT) fire ``after_s`` seconds into the task, DROP_HEARTBEATS for
+    ``duration_s``. FAIL_ALLOCATION fires on allocate calls after skipping
+    the first ``after_allocs``. ``count`` bounds total firings.
+    """
+    kind: FaultKind
+    task: str = "worker:0"
+    attempt: int = 0
+    at_step: int | None = None
+    after_s: float = 0.0
+    duration_s: float = 0.0
+    after_allocs: int = 0
+    count: int = 1
+
+    def matches_task(self, task_id: str) -> bool:
+        if self.task == "*":
+            return True
+        if self.task.endswith(":*"):
+            return task_id.split(":")[0] == self.task[:-2]
+        return task_id == self.task
+
+    def matches_attempt(self, attempt: int) -> bool:
+        return self.attempt == 0 or self.attempt == attempt
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, immutable list of faults. The seed identifies the plan in
+    events/logs and drives ``random_plan`` generation."""
+    seed: int = 0
+    faults: tuple[FaultSpec, ...] = ()
+
+    def add(self, spec: FaultSpec) -> "FaultPlan":
+        return FaultPlan(self.seed, self.faults + (spec,))
+
+    @staticmethod
+    def random_plan(seed: int, *, steps: int,
+                    tasks: tuple[str, ...] = ("worker:0",),
+                    n_faults: int = 2,
+                    kinds: tuple[FaultKind, ...] = (FaultKind.KILL_TASK,
+                                                    FaultKind.OOM)) -> "FaultPlan":
+        """Generate a reproducible plan: same seed -> same faults."""
+        rng = random.Random(seed)
+        faults = tuple(
+            FaultSpec(kind=rng.choice(kinds), task=rng.choice(tasks),
+                      attempt=0, at_step=rng.randrange(1, max(2, steps)))
+            for _ in range(n_faults))
+        return FaultPlan(seed=seed, faults=faults)
+
+
+class FaultInjector:
+    """Runtime consulted at the orchestrator's chaos hook points.
+
+    Thread-safe: executors, the AM monitor and RM allocate calls probe it
+    concurrently. All hooks short-circuit when the plan is empty.
+    """
+
+    def __init__(self, plan: FaultPlan | None = None,
+                 events: EventLog | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.plan = plan or FaultPlan()
+        self.events = events
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._fired: dict[int, int] = {}          # spec index -> firings
+        self._task_start: dict[tuple[str, int], float] = {}
+        self._hb_dropping: set[tuple[int, str, int]] = set()
+        self._alloc_calls = 0
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.plan.faults)
+
+    # ------------------------------------------------------------------
+    def _eligible(self, idx: int, spec: FaultSpec) -> bool:
+        return self._fired.get(idx, 0) < spec.count
+
+    def _fire(self, idx: int, spec: FaultSpec, **info) -> None:
+        self._fired[idx] = self._fired.get(idx, 0) + 1
+        if self.events is not None:
+            self.events.emit("chaos", "chaos_injected", fault=spec.kind.value,
+                             seed=self.plan.seed, spec_index=idx, **info)
+
+    def _specs(self, kind: FaultKind):
+        for idx, spec in enumerate(self.plan.faults):
+            if spec.kind is kind:
+                yield idx, spec
+
+    # ------------------------------------------------------------------
+    # Hook: RM.allocate (every container ask)
+
+    def on_allocate(self, app_id: str) -> str | None:
+        """Returns an error message when this allocate call should fail
+        (the RM raises AllocationError with it), else None."""
+        if not self.enabled:
+            return None
+        with self._lock:
+            self._alloc_calls += 1
+            for idx, spec in self._specs(FaultKind.FAIL_ALLOCATION):
+                if self._eligible(idx, spec) and \
+                        self._alloc_calls > spec.after_allocs:
+                    self._fire(idx, spec, app_id=app_id,
+                               alloc_call=self._alloc_calls)
+                    return (f"chaos: injected allocation failure "
+                            f"(seed={self.plan.seed}, call #{self._alloc_calls})")
+        return None
+
+    # ------------------------------------------------------------------
+    # Hook: TaskExecutor start + heartbeat loop
+
+    def task_started(self, task_id: str, attempt: int) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self._task_start.setdefault((task_id, attempt), self.clock())
+
+    def drop_heartbeat(self, task_id: str, attempt: int) -> bool:
+        """True while this task's heartbeats should be suppressed (a
+        simulated network partition / hung node)."""
+        if not self.enabled:
+            return False
+        with self._lock:
+            t0 = self._task_start.get((task_id, attempt))
+            if t0 is None:
+                return False
+            elapsed = self.clock() - t0
+            for idx, spec in self._specs(FaultKind.DROP_HEARTBEATS):
+                if not (spec.matches_task(task_id)
+                        and spec.matches_attempt(attempt)):
+                    continue
+                key = (idx, task_id, attempt)
+                in_window = spec.after_s <= elapsed < spec.after_s + spec.duration_s
+                if in_window and key not in self._hb_dropping:
+                    if not self._eligible(idx, spec):
+                        continue
+                    self._hb_dropping.add(key)
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               duration_s=spec.duration_s)
+                if in_window and key in self._hb_dropping:
+                    return True
+        return False
+
+    def should_preempt(self, task_id: str, attempt: int) -> bool:
+        """True once this task's container should be reclaimed mid-attempt
+        (capacity-scheduler preemption without a competing job)."""
+        if not self.enabled:
+            return False
+        with self._lock:
+            t0 = self._task_start.get((task_id, attempt))
+            if t0 is None:
+                return False
+            for idx, spec in self._specs(FaultKind.PREEMPT):
+                if (spec.matches_task(task_id) and spec.matches_attempt(attempt)
+                        and self._eligible(idx, spec)
+                        and self.clock() - t0 >= spec.after_s):
+                    self._fire(idx, spec, task=task_id, attempt=attempt)
+                    return True
+        return False
+
+    # ------------------------------------------------------------------
+    # Hook: the training loop (step-gated faults)
+
+    def check_step(self, task_id: str, attempt: int, step: int) -> None:
+        """Raise the planned fault when (task, attempt, step) matches a
+        KILL_TASK or OOM spec. The ML program calls this once per step."""
+        if not self.enabled:
+            return
+        with self._lock:
+            for idx, spec in self._specs(FaultKind.KILL_TASK):
+                if (spec.matches_task(task_id) and spec.matches_attempt(attempt)
+                        and spec.at_step == step and self._eligible(idx, spec)):
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               step=step)
+                    raise ChaosKill(
+                        f"chaos: injected kill of {task_id} at "
+                        f"attempt={attempt} step={step} (seed={self.plan.seed})")
+            for idx, spec in self._specs(FaultKind.OOM):
+                if (spec.matches_task(task_id) and spec.matches_attempt(attempt)
+                        and spec.at_step == step and self._eligible(idx, spec)):
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               step=step, oom=True)
+                    raise ChaosOOM(OOM_MESSAGE.format(nbytes=17_179_869_184))
+
+
+#: Shared no-op injector — the production default everywhere chaos threads
+#: through. Empty plan => every hook returns immediately.
+NO_CHAOS = FaultInjector(FaultPlan())

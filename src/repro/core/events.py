@@ -25,6 +25,16 @@ FAILURE_EVENT_KINDS = frozenset({
     "task_failed", "attempt_classified", "retry_scheduled", "retry_abandoned",
 })
 
+#: Recovery / chaos event kinds (core/chaos.py, core/rm.py NodeHealthTracker):
+#:   chaos_injected     — a planned fault fired (kind, seed, task/step info)
+#:   attempt_resumed    — a relaunched attempt restored from a checkpoint
+#:                        (resume_step) instead of cold-starting
+#:   node_blacklisted   — K INFRA failures tipped a node out of placement
+#:   node_paroled       — a blacklisted node's parole expired; allowed back
+RECOVERY_EVENT_KINDS = frozenset({
+    "chaos_injected", "attempt_resumed", "node_blacklisted", "node_paroled",
+})
+
 
 class EventLog:
     def __init__(self):
@@ -48,6 +58,9 @@ class EventLog:
         return len(self.of_kind(kind))
 
     def failure_timeline(self) -> list[Event]:
-        """All failure-diagnostics events in order — the 'why did my job
-        fail' trail the history server renders."""
-        return [e for e in self.all() if e.kind in FAILURE_EVENT_KINDS]
+        """All failure-diagnostics + recovery events in order — the 'why did
+        my job fail (and how did it come back)' trail the history server
+        renders."""
+        return [e for e in self.all()
+                if e.kind in FAILURE_EVENT_KINDS
+                or e.kind in RECOVERY_EVENT_KINDS]

@@ -19,6 +19,7 @@ diagnostics; the history server and metrics analyzer surface them.
 """
 from __future__ import annotations
 
+import re
 import time
 import traceback as _tb
 from dataclasses import dataclass, field, replace
@@ -48,6 +49,23 @@ EXIT_PREEMPTED = 137        # SIGKILL by the scheduler
 EXIT_TEARDOWN = 143         # SIGTERM by the AM (sibling failed / cancel)
 EXIT_EXECUTOR_ERROR = 2     # the executor itself (not the child) broke
 
+#: Exception types that mean the process ran out of memory outright.
+OOM_EXCEPTION_TYPES = frozenset({"MemoryError", "ChaosOOM"})
+
+#: Message signatures of allocator exhaustion: XLA's RESOURCE_EXHAUSTED
+#: status, CUDA's OOM error, and the generic phrasing JAX/TF surface them
+#: with. Matched case-insensitively against the exception message.
+_OOM_MESSAGE_PATTERNS = re.compile(
+    r"RESOURCE_EXHAUSTED|CUDA_ERROR_OUT_OF_MEMORY|out of memory|"
+    r"failed to allocate .* memory|OOM when allocating", re.IGNORECASE)
+
+
+def is_oom_signature(exception_type: str, message: str = "") -> bool:
+    """Does (type, message) look like the task died of memory exhaustion?"""
+    if exception_type in OOM_EXCEPTION_TYPES:
+        return True
+    return bool(message) and _OOM_MESSAGE_PATTERNS.search(message) is not None
+
 
 @dataclass(frozen=True)
 class TaskDiagnostics:
@@ -59,6 +77,9 @@ class TaskDiagnostics:
     exception_type: str = ""
     message: str = ""
     traceback: str = ""
+    # the task died of memory exhaustion (MemoryError / RESOURCE_EXHAUSTED);
+    # INFRA-classified, and the node-health tracker + analyzer key off it
+    oom: bool = False
 
     def to_dict(self) -> dict:
         return {
@@ -68,18 +89,28 @@ class TaskDiagnostics:
             "exception_type": self.exception_type,
             "message": self.message,
             "traceback": self.traceback,
+            "oom": self.oom,
         }
 
     def describe(self) -> str:
         head = f"{self.task_id}: [{self.classification.value}]"
+        tail = " (OOM)" if self.oom else ""
         if self.exception_type:
-            return f"{head} {self.exception_type}: {self.message}"
-        return f"{head} exit status {self.exit_status}"
+            return f"{head} {self.exception_type}: {self.message}{tail}"
+        return f"{head} exit status {self.exit_status}{tail}"
 
 
-def classify_exception(exc: BaseException | str) -> FailureClass:
-    """Map a child-program exception (or its type name) to a failure class."""
+def classify_exception(exc: BaseException | str,
+                       message: str = "") -> FailureClass:
+    """Map a child-program exception (or its type name + message) to a
+    failure class. OOM signatures are INFRA: the *node* ran out of memory
+    (or the container was sized wrong) — a reallocation elsewhere can
+    succeed, and repeated OOMs on one host feed node blacklisting."""
     name = exc if isinstance(exc, str) else type(exc).__name__
+    if not message and not isinstance(exc, str):
+        message = str(exc)
+    if is_oom_signature(name, message):
+        return FailureClass.INFRA
     if name in FATAL_USER_EXCEPTIONS:
         return FailureClass.FATAL_USER
     return FailureClass.TRANSIENT
@@ -95,14 +126,16 @@ def classify_exit(status: int) -> FailureClass:
 def diagnose_exception(task_id: str, exc: BaseException,
                        exit_status: int = 1) -> TaskDiagnostics:
     """Build diagnostics from a live exception (captures the traceback)."""
+    name, msg = type(exc).__name__, str(exc)
     return TaskDiagnostics(
         task_id=task_id,
         exit_status=exit_status,
-        classification=classify_exception(exc),
-        exception_type=type(exc).__name__,
-        message=str(exc),
+        classification=classify_exception(name, msg),
+        exception_type=name,
+        message=msg,
         traceback="".join(_tb.format_exception(type(exc), exc,
                                                exc.__traceback__)),
+        oom=is_oom_signature(name, msg),
     )
 
 

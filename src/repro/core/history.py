@@ -48,6 +48,9 @@ class JobHistoryServer:
             "diagnostics": {k: d.to_dict() for k, d in sorted(diags.items())},
             "failure_reasons": e.result.failure_summary(),
             "retry_advice": self._retry_advice(e.result),
+            # checkpoint-aware recovery + node health, per the chaos subsystem
+            "resumed_attempts": dict(e.result.resumed_attempts),
+            "blacklisted_nodes": list(e.result.blacklisted_nodes),
         }
 
     @staticmethod
@@ -110,9 +113,19 @@ class MetricsAnalyzer:
         """Per-classification retry advice from the diagnostics subsystem."""
         out: list[Suggestion] = []
         by_class: dict[FailureClass, list[str]] = {}
+        oom_tasks: list[str] = []
         for key, d in sorted(result.diagnostics.items()):
             by_class.setdefault(d.classification, []).append(
                 f"{key}: {d.exception_type or 'exit'} {d.message}".strip())
+            if d.oom:
+                oom_tasks.append(key)
+        if oom_tasks:
+            out.append(Suggestion(
+                "*", "oom",
+                "tasks died of memory exhaustion (" + ", ".join(oom_tasks)
+                + "); raise tony.<task>.memory or shrink the per-container "
+                  "batch — repeated OOMs on one host also trip node "
+                  "blacklisting"))
         if FailureClass.FATAL_USER in by_class:
             out.append(Suggestion(
                 "*", "user_error",

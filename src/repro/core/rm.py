@@ -11,9 +11,13 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
+from typing import Callable
 
+from repro.core.chaos import NO_CHAOS, FaultInjector
 from repro.core.events import EventLog
+from repro.core.failures import FailureClass, TaskDiagnostics
 from repro.core.resources import (
     ZERO,
     Container,
@@ -35,6 +39,80 @@ class AllocationError(RuntimeError):
     pass
 
 
+class NodeHealthTracker:
+    """Blacklist nodes that keep producing INFRA failures.
+
+    A flaky host (bad GPU, broken disk, memory pressure) fails every task
+    scheduled onto it; without tracking, the RM re-allocates each retried
+    attempt straight back onto the same node and the retry budget burns on
+    known-bad hardware. After ``threshold`` classified INFRA failures the
+    node is excluded from placement, with timed parole (``parole_s``) so a
+    recovered host rejoins — on parole it re-enters one strike from
+    re-blacklisting rather than with a clean slate.
+
+    Only INFRA counts: FATAL_USER is the program's fault and TRANSIENT
+    (teardown of innocent siblings, heartbeat blips, contention) would
+    poison nodes that merely hosted a collateral victim.
+    """
+
+    def __init__(self, threshold: int = 3, parole_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 events: EventLog | None = None):
+        self.threshold = threshold
+        self.parole_s = parole_s
+        self.clock = clock
+        self.events = events
+        self._lock = threading.Lock()
+        self._failures: dict[str, int] = {}
+        self._parole_at: dict[str, float] = {}    # node -> parole deadline
+
+    def record_failure(self, node_id: str, diag: TaskDiagnostics) -> bool:
+        """Count one attributed failure against ``node_id``. Returns True
+        when this failure tipped the node into the blacklist."""
+        if diag.classification is not FailureClass.INFRA:
+            return False
+        with self._lock:
+            n = self._failures.get(node_id, 0) + 1
+            self._failures[node_id] = n
+            if n >= self.threshold and node_id not in self._parole_at:
+                self._parole_at[node_id] = self.clock() + self.parole_s
+                if self.events is not None:
+                    self.events.emit("rm", "node_blacklisted", node=node_id,
+                                     infra_failures=n, oom=diag.oom,
+                                     parole_s=self.parole_s,
+                                     reason=diag.describe())
+                return True
+        return False
+
+    def record_success(self, node_id: str) -> None:
+        """A clean attempt on the node wipes its strike count."""
+        with self._lock:
+            self._failures.pop(node_id, None)
+
+    def is_blacklisted(self, node_id: str) -> bool:
+        with self._lock:
+            deadline = self._parole_at.get(node_id)
+            if deadline is None:
+                return False
+            if self.clock() >= deadline:
+                # parole: allow the node back, one strike from re-blacklist
+                del self._parole_at[node_id]
+                self._failures[node_id] = self.threshold - 1
+                if self.events is not None:
+                    self.events.emit("rm", "node_paroled", node=node_id)
+                return False
+            return True
+
+    def blacklisted(self) -> list[str]:
+        return sorted(n for n in list(self._parole_at)
+                      if self.is_blacklisted(n))
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"failures": dict(self._failures),
+                    "blacklisted": sorted(self._parole_at)}
+
+
 _app_ids = itertools.count(1)
 
 
@@ -43,7 +121,9 @@ class ResourceManager:
     threads."""
 
     def __init__(self, nodes: list[Node], queues: dict[str, float] | None = None,
-                 event_log: EventLog | None = None, elastic: bool = False):
+                 event_log: EventLog | None = None, elastic: bool = False,
+                 chaos: FaultInjector | None = None,
+                 health: NodeHealthTracker | None = None):
         self.nodes = {n.node_id: n for n in nodes}
         queues = queues or {"default": 1.0}
         assert abs(sum(queues.values()) - 1.0) < 1e-6, "queue shares must sum to 1"
@@ -52,6 +132,10 @@ class ResourceManager:
         # share; preemption (try_preempt_for) reclaims it on demand
         self.elastic = elastic
         self.events = event_log or EventLog()
+        # chaos: fault-injection hooks (no-op by default); health: node
+        # blacklisting after repeated INFRA failures (core/chaos.py docs)
+        self.chaos = chaos or NO_CHAOS
+        self.health = health or NodeHealthTracker(events=self.events)
         self._lock = threading.RLock()
         self._containers: dict[str, Container] = {}
         self._container_queue: dict[str, str] = {}
@@ -92,9 +176,15 @@ class ResourceManager:
     def allocate(self, app_id: str, request: ContainerRequest) -> Container:
         """Allocate one container honoring queue share + node labels.
 
-        Raises AllocationError when the queue is over its share or no labelled
-        node can fit the request.
+        Raises AllocationError when the queue is over its share, no labelled
+        node can fit the request, or a chaos plan injects a failure.
+        Blacklisted nodes (NodeHealthTracker) are excluded from placement.
         """
+        chaos_error = self.chaos.on_allocate(app_id)
+        if chaos_error is not None:
+            self.events.emit("rm", "allocation_chaos_failed", app_id=app_id,
+                             error=chaos_error)
+            raise AllocationError(chaos_error)
         with self._lock:
             queue = self._apps[app_id]["queue"]
             q = self.queues[queue]
@@ -105,6 +195,8 @@ class ResourceManager:
             for node in sorted(self.nodes.values(),
                                key=lambda n: -n.available.memory_mb):
                 if request.node_label and request.node_label not in node.labels:
+                    continue
+                if self.health.is_blacklisted(node.node_id):
                     continue
                 if node.can_fit(request.resource):
                     node.used = node.used + request.resource
@@ -177,6 +269,8 @@ class ResourceManager:
         for n in self.nodes.values():
             if request.node_label and request.node_label not in n.labels:
                 continue
+            if self.health.is_blacklisted(n.node_id):
+                continue
             avail.append(n.available)
         placed = 0
         for free in sorted(avail, key=lambda r: -r.memory_mb):
@@ -220,6 +314,19 @@ class ResourceManager:
             return self._containers[container_id].state
 
     # ------------------------------------------------------------------
+    # Node health: the AM attributes task failures to the hosting node so
+    # repeated INFRA trouble gets the node excluded from future placement.
+
+    def report_node_failure(self, node_id: str, diag: TaskDiagnostics) -> bool:
+        if node_id not in self.nodes:
+            return False
+        return self.health.record_failure(node_id, diag)
+
+    def report_node_success(self, node_id: str) -> None:
+        if node_id in self.nodes:
+            self.health.record_success(node_id)
+
+    # ------------------------------------------------------------------
     def live_containers(self) -> list[Container]:
         with self._lock:
             return [c for c in self._containers.values()
@@ -250,7 +357,9 @@ def make_cluster(num_gpu_nodes: int = 4, num_cpu_nodes: int = 4,
                  gpus_per_node: int = 4, memory_mb: int = 256_000,
                  vcores: int = 64,
                  queues: dict[str, float] | None = None,
-                 event_log: EventLog | None = None) -> ResourceManager:
+                 event_log: EventLog | None = None,
+                 chaos: FaultInjector | None = None,
+                 health: NodeHealthTracker | None = None) -> ResourceManager:
     """Convenience factory for a small heterogeneous cluster."""
     nodes = []
     for i in range(num_gpu_nodes):
@@ -259,4 +368,4 @@ def make_cluster(num_gpu_nodes: int = 4, num_cpu_nodes: int = 4,
     for i in range(num_cpu_nodes):
         nodes.append(Node(f"cpu-node-{i}", Resource(memory_mb, vcores, 0),
                           frozenset({"highmem"})))
-    return ResourceManager(nodes, queues, event_log)
+    return ResourceManager(nodes, queues, event_log, chaos=chaos, health=health)

@@ -17,6 +17,7 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.core.chaos import NO_CHAOS, FaultInjector
 from repro.core.cluster_spec import TaskAddress, task_env
 from repro.core.events import EventLog
 from repro.core.failures import (
@@ -76,10 +77,15 @@ class JobContext:
     shared: dict[str, Any] = field(default_factory=dict)
     cancel: threading.Event = field(default_factory=threading.Event)
     workdir: str = ""
+    # fault-injection hooks for the ML program (``ctx.chaos.check_step``);
+    # NO_CHAOS by default so programs can call it unconditionally
+    chaos: FaultInjector = None  # type: ignore[assignment]
 
     def __post_init__(self):
         if self.barrier is None:
             self.barrier = CancellableBarrier(self.world_size)
+        if self.chaos is None:
+            self.chaos = NO_CHAOS
 
     def rendezvous(self, timeout: float = 300.0) -> bool:
         return self.barrier.wait(self.cancel, timeout)
@@ -92,7 +98,8 @@ class TaskExecutor:
                  am: "ApplicationMasterProtocol", ml_program: MLProgram,
                  job_args: dict[str, str], ctx: JobContext,
                  ports: PortAllocator, events: EventLog,
-                 is_chief_worker: bool = False):
+                 is_chief_worker: bool = False,
+                 chaos: FaultInjector | None = None):
         self.task_type = task_type
         self.index = index
         self.container = container
@@ -103,6 +110,7 @@ class TaskExecutor:
         self.ports = ports
         self.events = events
         self.is_chief_worker = is_chief_worker
+        self.chaos = chaos or ctx.chaos or NO_CHAOS
         self.task_id = f"{task_type}:{index}"
         self.exit_status: int | None = None
         self.diagnostics: TaskDiagnostics | None = None
@@ -173,18 +181,27 @@ class TaskExecutor:
             child_t = threading.Thread(target=child, name=f"ml-{self.task_id}",
                                        daemon=True)
             child_t.start()
+            attempt = int(self.ctx.shared.get("attempt", 1))
+            self.chaos.task_started(self.task_id, attempt)
             while child_t.is_alive():
-                self.am.heartbeat(self.task_id)
+                if self.chaos.drop_heartbeat(self.task_id, attempt):
+                    # chaos: simulated network partition — the AM sees a
+                    # silent task and attributes a heartbeat timeout
+                    pass
+                else:
+                    self.am.heartbeat(self.task_id)
                 if self.ctx.cancel.is_set():
                     # AM-initiated teardown: abandon the child (thread stand-in
                     # for SIGKILL on the real container process)
                     self.log("teardown requested; abandoning child")
                     result.setdefault("exit", 143)
                     break
-                if self.container.state.value == "preempted":
+                if self.container.state.value == "preempted" or \
+                        self.chaos.should_preempt(self.task_id, attempt):
                     # the scheduler reclaimed this container (capacity-
-                    # scheduler preemption); report SIGKILL-style exit so the
-                    # AM relaunches via the normal fault-tolerance path
+                    # scheduler preemption, organic or chaos-injected);
+                    # report SIGKILL-style exit so the AM relaunches via the
+                    # normal fault-tolerance path
                     self.log("container preempted by scheduler")
                     result.setdefault("exit", 137)
                     break

@@ -92,12 +92,25 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
             train_fn, _ = make_train_fn(
                 cfg, mesh, strategy, opt=AdamWConfig(lr=lr, weight_decay=0.0))
             state = init_train_state(cfg, jax.random.PRNGKey(0))
+            # checkpoint-aware recovery: prefer the AM's resume_step (the
+            # deepest checkpoint a previous attempt committed), fall back to
+            # whatever this directory holds (resume across submissions), and
+            # only then cold-start from step 0
             start = 0
-            last = ckpt.latest_step()
-            if last is not None:
-                state = ckpt.restore(state, last)
-                data.load_state_dict({"step": last})
-                start = int(last)
+            target = ctx.shared.get("resume_step")
+            if target is None:
+                target = ckpt.latest_step()
+            if target is not None:
+                try:
+                    state = ckpt.restore(state, int(target))
+                except (FileNotFoundError, KeyError, ValueError, OSError):
+                    target = ckpt.latest_step()
+                    if target is not None:
+                        state = ckpt.restore(state, int(target))
+            if target is not None:
+                data.load_state_dict({"step": int(target)})
+                start = int(target)
+                ctx.shared["ckpt_step"] = start
                 ctx.shared.setdefault("restarts", []).append(
                     {"attempt": attempt, "restored_step": start})
 
@@ -105,6 +118,7 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
             for step in range(start, steps):
                 if ctx.cancel.is_set():
                     return 143
+                ctx.chaos.check_step(task_id, attempt, step)
                 if fail_at is not None and (attempt, step) == fail_at:
                     raise RuntimeError(
                         f"injected transient failure at attempt={attempt} step={step}")
@@ -117,6 +131,9 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
                 if (step + 1) % ckpt_every == 0 or step + 1 == steps:
                     ckpt.save(jax.tree.map(np.asarray, state), step + 1)
                     data.step = step + 1
+                    # tell the AM which checkpoint the next attempt may
+                    # resume from (its side of the resume_step contract)
+                    ctx.shared["ckpt_step"] = step + 1
             ctx.shared[f"metrics:{task_id}"] = {
                 "peak_memory_mb": float(
                     sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))

@@ -13,8 +13,14 @@ import tempfile
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core import (
+    EventLog,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
     JobHistoryServer,
     MetricsAnalyzer,
+    NodeHealthTracker,
     TonYClient,
     YarnLikeBackend,
     format_failure_report,
@@ -57,12 +63,41 @@ def main() -> None:
     ap.add_argument("--strategy", default="fsdp_tp")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
+    chaos = ap.add_argument_group(
+        "chaos", "deterministic fault injection (core/chaos.py)")
+    chaos.add_argument("--chaos-seed", type=int, default=1234,
+                       help="seed identifying the fault plan in events/logs")
+    chaos.add_argument("--chaos-kill-step", type=int, default=None,
+                       help="kill the chief worker at this step (once)")
+    chaos.add_argument("--chaos-oom-step", type=int, default=None,
+                       help="OOM the chief worker at this step (once)")
+    chaos.add_argument("--chaos-random-faults", type=int, default=0,
+                       help="generate N seeded random kill/OOM faults")
+    chaos.add_argument("--blacklist-threshold", type=int, default=3,
+                       help="INFRA failures on one node before blacklisting")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="tony-train-")
 
-    rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=2, gpus_per_node=4)
+    plan = FaultPlan(seed=args.chaos_seed)
+    if args.chaos_kill_step is not None:
+        plan = plan.add(FaultSpec(FaultKind.KILL_TASK, task="worker:0",
+                                  at_step=args.chaos_kill_step))
+    if args.chaos_oom_step is not None:
+        plan = plan.add(FaultSpec(FaultKind.OOM, task="worker:0",
+                                  at_step=args.chaos_oom_step))
+    if args.chaos_random_faults:
+        plan = FaultPlan(plan.seed, plan.faults + FaultPlan.random_plan(
+            args.chaos_seed, steps=args.steps,
+            n_faults=args.chaos_random_faults).faults)
+
+    events = EventLog()
+    rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=2, gpus_per_node=4,
+                      event_log=events,
+                      chaos=FaultInjector(plan, events=events),
+                      health=NodeHealthTracker(
+                          threshold=args.blacklist_threshold, events=events))
     client = TonYClient(YarnLikeBackend(rm))
     job = build_job(f"train-{cfg.name}", args.workers, args.ps)
 
@@ -86,6 +121,9 @@ def main() -> None:
         "suggestions": [s.message for s in MetricsAnalyzer().analyze(job, result)],
         "failure_reasons": summary["failure_reasons"],
         "retry_advice": summary["retry_advice"],
+        "resumed_attempts": summary["resumed_attempts"],
+        "blacklisted_nodes": summary["blacklisted_nodes"],
+        "chaos_injected": events.count("chaos_injected"),
         "ckpt_dir": ckpt_dir,
     }, indent=2))
     if not result.succeeded:

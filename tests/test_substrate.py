@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, latest_step
 from repro.data import FileTokenDataset, SyntheticLMDataset
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 
@@ -23,7 +23,7 @@ def test_checkpoint_latest_and_gc(tmp_path):
         ck.save(tree, s)
     assert ck.latest_step() == 15
     files = sorted(os.listdir(tmp_path))
-    assert files == ["ckpt_00000010.npz", "ckpt_00000015.npz"]  # gc kept 2
+    assert files == ["step_00000010", "step_00000015"]  # gc kept 2
     back = ck.restore(tree)
     np.testing.assert_array_equal(back["a"], tree["a"])
     np.testing.assert_array_equal(back["b"]["c"], tree["b"]["c"])
@@ -34,6 +34,43 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
     ck.save({"a": np.ones((2, 2))}, 1)
     with pytest.raises(ValueError, match="shape mismatch"):
         ck.restore({"a": np.ones((3, 3))})
+
+
+def test_checkpoint_gc_tolerates_junk_and_half_written(tmp_path):
+    """_gc and latest_step skip non-step entries, staging dirs and steps
+    missing their COMMIT marker (a writer killed mid-checkpoint) instead of
+    crashing or resuming from a torn checkpoint."""
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": np.ones((2,), np.float32)}
+    (tmp_path / "notes.txt").write_text("user junk")
+    (tmp_path / ".tmp-step_00000042-abc").mkdir()      # abandoned staging dir
+    half = tmp_path / "step_00000099"                  # killed mid-write:
+    half.mkdir()                                       # arrays, no COMMIT
+    np.savez(half / "arrays.npz", a=np.zeros((2,), np.float32))
+    for s in (1, 2, 3):
+        ck.save(tree, s)                               # _gc runs each save
+    assert ck.latest_step() == 3                       # 99 is invisible
+    back = ck.restore(tree)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    left = sorted(os.listdir(tmp_path))
+    assert "notes.txt" in left and "step_00000099" in left  # skipped, kept
+    assert "step_00000001" not in left                 # gc dropped oldest
+    with pytest.raises(FileNotFoundError):             # uncommitted = absent
+        ck.restore(tree, 99)
+
+
+def test_checkpoint_reads_legacy_flat_format(tmp_path):
+    """Pre-PR-7 flat ckpt_*.npz files still restore and participate in gc."""
+    tree = {"a": np.arange(4, dtype=np.float32)}
+    np.savez(str(tmp_path / "ckpt_00000005.npz"), a=tree["a"] * 2)
+    assert latest_step(str(tmp_path)) == 5
+    ck = Checkpointer(str(tmp_path), keep=2)
+    back = ck.restore(tree, 5)
+    np.testing.assert_array_equal(back["a"], tree["a"] * 2)
+    ck.save(tree, 7)                                   # new format on top
+    assert ck.latest_step() == 7
+    ck.save(tree, 9)                                   # keep=2 -> legacy gc'd
+    assert sorted(os.listdir(tmp_path)) == ["step_00000007", "step_00000009"]
 
 
 # ----------------------------------------------------------------------
