@@ -7,12 +7,20 @@ import time
 
 from repro.core import (
     ContainerRequest,
+    EventLog,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
     Resource,
+    SpeculationPolicy,
     TonYClient,
     YarnLikeBackend,
     job_spec_from_props,
     make_cluster,
 )
+
+CHAOS_SEED = 1234
 
 
 def _noop_program(env, ctx):
@@ -109,10 +117,63 @@ def bench_fault_recovery_overhead() -> list[tuple[str, float, str]]:
              f"attempt1={a1*1e3:.1f}ms attempt2={a2*1e3:.1f}ms")]
 
 
+def bench_speculation_straggler() -> list[tuple[str, float, str]]:
+    """Job-completion time under one injected straggler (seeded SLOW_STEP on
+    worker:1), speculation off vs on — the tentpole's headline number."""
+    steps, work_s = 12, 0.01
+
+    def gang_program(env, ctx):
+        tid = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        speculative = env.get("SPECULATIVE") == "1"
+        exec_id = tid + "#1" if speculative else tid
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not speculative and not ctx.rendezvous(timeout=30):
+            return 3
+        for step in range(steps):
+            if ctx.cancel.is_set():
+                return 143
+            ctx.step(exec_id, attempt, step)
+            time.sleep(work_s)
+        return 0
+
+    def run(speculation_on: bool) -> float:
+        plan = FaultPlan(seed=CHAOS_SEED).add(
+            FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=2,
+                      delay_s=0.08))
+        ev = EventLog()
+        rm = make_cluster(event_log=ev, chaos=FaultInjector(plan, events=ev))
+        pol = SpeculationPolicy(enabled=speculation_on, slowdown_factor=2.0,
+                                patience=3, min_progress=4)
+        job = job_spec_from_props({
+            "tony.application.name": "bench-straggler",
+            "tony.worker.instances": "3",
+            "tony.worker.memory": "1024",
+            "tony.worker.gpus": "1",
+            "tony.worker.node-label": "gpu",
+        })
+        t0 = time.monotonic()
+        res = TonYClient(YarnLikeBackend(rm, speculation=pol)).run_and_wait(
+            job, gang_program, timeout=120)
+        dt = time.monotonic() - t0
+        assert res.succeeded and len(res.attempts) == 1
+        if speculation_on:
+            assert res.attempts[0].speculation == {"worker:1": "won"}
+        return dt
+
+    t_off = run(False)
+    t_on = run(True)
+    assert t_on < t_off, \
+        f"speculation should cut straggler JCT: on={t_on:.2f}s off={t_off:.2f}s"
+    return [("straggler_no_spec", t_off * 1e6, "worker:1 slowed 80ms/step"),
+            ("straggler_with_spec", t_on * 1e6,
+             f"backup wins; speedup={t_off / t_on:.2f}x")]
+
+
 def all_benches() -> list[tuple[str, float, str]]:
     rows = []
     rows += bench_allocation_throughput()
     rows += bench_job_lifecycle_latency()
     rows += bench_cluster_spec_barrier()
     rows += bench_fault_recovery_overhead()
+    rows += bench_speculation_straggler()
     return rows

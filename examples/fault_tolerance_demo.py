@@ -1,18 +1,31 @@
-"""Fault-tolerance demo (paper §2.2), driven by the chaos harness: a seeded
-FaultPlan OOMs the chief worker at step 5 on its first two attempts. The AM
-classifies each failure (INFRA, oom), schedules retries with backoff, resumes
-every relaunch from the last committed checkpoint (step 3, not step 0), and
-after the second OOM on the same host the RM blacklists that node — attempt 3
-is placed elsewhere and trains to completion.
+"""Fault-tolerance demo (paper §2.2), driven by the chaos harness.
+
+Act 1 — crash recovery: a seeded FaultPlan OOMs the chief worker at step 5
+on its first two attempts. The AM classifies each failure (INFRA, oom),
+schedules retries with backoff, resumes every relaunch from the last
+committed checkpoint (step 3, not step 0), and after the second OOM on the
+same host the RM blacklists that node — attempt 3 is placed elsewhere and
+trains to completion.
+
+Act 2 — speculative execution: a SLOW_STEP fault makes one worker a
+straggler (slow, not dead — crash recovery never triggers). The AM spots it
+lagging the gang median in heartbeat progress, launches a backup copy on a
+different node, the backup wins the race, and the slow original is torn
+down as a TRANSIENT loser without ever striking its node.
 
     PYTHONPATH=src python examples/fault_tolerance_demo.py
     CHAOS_SEED=99 PYTHONPATH=src python examples/fault_tolerance_demo.py
+
+See ROADMAP.md ("Testing with the chaos harness") for the recipe these acts
+follow: seed a plan, run the job, assert on the event trail.
 """
 import os
 import tempfile
+import time
 
 from repro.configs import get_config
 from repro.core import (
+    EXIT_SPECULATION_LOST,
     EventLog,
     FailureClass,
     FaultInjector,
@@ -20,7 +33,9 @@ from repro.core import (
     FaultPlan,
     FaultSpec,
     JobHistoryServer,
+    MetricsAnalyzer,
     NodeHealthTracker,
+    SpeculationPolicy,
     TonYClient,
     YarnLikeBackend,
     job_spec_from_props,
@@ -29,6 +44,65 @@ from repro.core import (
 from repro.launch.programs import make_train_program
 
 CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "1234"))
+
+
+def speculation_act() -> None:
+    """Act 2: injected straggler -> detection -> backup wins the race."""
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=2,
+                  delay_s=0.08))
+    events = EventLog()
+    rm = make_cluster(event_log=events,
+                      chaos=FaultInjector(plan, events=events))
+    policy = SpeculationPolicy(enabled=True, slowdown_factor=2.0,
+                               patience=3, min_progress=4)
+    job = job_spec_from_props({
+        "tony.application.name": "speculation-demo",
+        "tony.worker.instances": "3",
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+
+    def gang_program(env, ctx):
+        tid = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        speculative = env.get("SPECULATIVE") == "1"
+        exec_id = tid + "#1" if speculative else tid
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not speculative and not ctx.rendezvous(timeout=30):
+            return 3
+        for step in range(12):
+            if ctx.cancel.is_set():
+                return 143
+            ctx.step(exec_id, attempt, step)
+            time.sleep(0.01)
+        return 0
+
+    result = TonYClient(YarnLikeBackend(rm, speculation=policy)).run_and_wait(
+        job, gang_program, timeout=60)
+    a = result.attempts[0]
+
+    print(f"\n=== Act 2: speculative execution (seed={CHAOS_SEED}) ===")
+    print("straggler detected:", a.stragglers)
+    launched = events.of_kind("speculative_launched")[0].payload
+    print(f"backup {launched['exec_id']} launched on {launched['node']} "
+          f"(avoiding slow {launched['avoided_node']})")
+    assert result.succeeded and len(result.attempts) == 1
+    assert a.speculation == {"worker:1": "won"}
+    assert a.exit_statuses["worker:1"] == EXIT_SPECULATION_LOST
+    assert a.nodes["worker:1#1"] != a.nodes["worker:1"]
+    print("race outcome:", a.speculation,
+          f"(loser torn down with exit {EXIT_SPECULATION_LOST})")
+    # losing a race is not a node failure: no strikes, no blacklist
+    assert rm.health.snapshot()["failures"] == {}
+    assert result.diagnostics == {}
+    print("node strikes after the race:", rm.health.snapshot()["failures"])
+    advice = [s.message for s in MetricsAnalyzer().analyze(job, result)
+              if s.kind == "straggler"]
+    print("analyzer advice:", advice[0])
+    print("speculation timeline:",
+          [e.kind for e in events.failure_timeline()])
+    print("OK (act 2)")
 
 
 def main() -> None:
@@ -105,7 +179,9 @@ def main() -> None:
     assert summary["resumed_attempts"] == {2: 3, 3: 3}
     print("failure timeline kinds:",
           [e.kind for e in events.failure_timeline()])
-    print("OK")
+    print("OK (act 1)")
+
+    speculation_act()
 
 
 if __name__ == "__main__":

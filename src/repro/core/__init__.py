@@ -25,10 +25,12 @@ from repro.core.config import job_spec_from_props, parse_tony_xml, to_tony_xml  
 from repro.core.events import (  # noqa: F401
     FAILURE_EVENT_KINDS,
     RECOVERY_EVENT_KINDS,
+    SPECULATION_EVENT_KINDS,
     Event,
     EventLog,
 )
 from repro.core.failures import (  # noqa: F401
+    EXIT_SPECULATION_LOST,
     FailureClass,
     RetryDecision,
     RetryPolicy,
@@ -51,6 +53,13 @@ from repro.core.rm import (  # noqa: F401
     NodeHealthTracker,
     ResourceManager,
     make_cluster,
+)
+from repro.core.speculation import (  # noqa: F401
+    SpeculationPolicy,
+    SpeculationTracker,
+    is_speculative_id,
+    primary_id,
+    speculative_id,
 )
 from repro.core.task_executor import JobContext, TaskExecutor  # noqa: F401
 from repro.core.workflow import Workflow, WorkflowNode  # noqa: F401

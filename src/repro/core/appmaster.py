@@ -32,6 +32,12 @@ from repro.core.resources import (
     PortAllocator,
 )
 from repro.core.rm import AllocationError, ResourceManager
+from repro.core.speculation import (
+    SpeculationPolicy,
+    SpeculationTracker,
+    SpeculativeCopy,
+    is_speculative_id,
+)
 from repro.core.task_executor import (
     ApplicationMasterProtocol,
     JobContext,
@@ -58,8 +64,14 @@ class AttemptReport:
     # from step 0
     resume_step: int | None = None
     checkpoint_step: int | None = None
-    # task_id -> node that hosted it (failure attribution + blacklisting)
+    # task_id -> node that hosted it (failure attribution + blacklisting);
+    # includes speculative copies under their "task#copy" exec ids
     nodes: dict[str, str] = field(default_factory=dict)
+    # speculative execution: tasks flagged as stragglers this attempt, and
+    # primary task -> race outcome (won | cancelled | failed) for every
+    # backup copy that was launched
+    stragglers: list[str] = field(default_factory=list)
+    speculation: dict[str, str] = field(default_factory=dict)
 
 
 @dataclass
@@ -85,6 +97,13 @@ class JobResult:
         return {r.attempt: r.resume_step for r in self.attempts
                 if r.resume_step is not None}
 
+    @property
+    def speculation(self) -> dict[str, str]:
+        """"a<attempt>/<task>" -> race outcome (won/cancelled/failed) for
+        every speculative backup launched across attempts."""
+        return {f"a{r.attempt}/{t}": o for r in self.attempts
+                for t, o in r.speculation.items()}
+
     def failure_summary(self) -> list[str]:
         """Human-readable one-liner per attributed failure, in attempt order."""
         return [f"{key}: [{d.classification.value}] "
@@ -102,7 +121,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
                  ports: PortAllocator | None = None,
                  workdir: str = "",
                  retry_policy: RetryPolicy | None = None,
-                 chaos: FaultInjector | None = None):
+                 chaos: FaultInjector | None = None,
+                 speculation: SpeculationPolicy | None = None):
         self.rm = rm
         self.app_id = app_id
         self.job = job
@@ -115,6 +135,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self.chaos = chaos or getattr(rm, "chaos", None) or NO_CHAOS
         self.retry_policy = retry_policy or RetryPolicy(
             max_attempts=job.max_app_attempts)
+        # straggler detection + speculative backups (disabled by default)
+        self.speculation = speculation or SpeculationPolicy()
         self.heartbeat_timeout_s = HEARTBEAT_TIMEOUT_S
         self.ui_url: str | None = None
         self.task_logs: dict[str, list[str]] = {}
@@ -122,6 +144,7 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self._lock = threading.Lock()
         self._registrations: dict[str, tuple[TaskExecutor, TaskAddress]] = {}
         self._last_heartbeat: dict[str, float] = {}
+        self._progress: dict[str, int] = {}      # exec_id -> latest step
         self._exits: dict[str, int] = {}
         self._exit_diagnostics: dict[str, TaskDiagnostics] = {}
         self._stale_tasks: dict[str, TaskDiagnostics] = {}
@@ -145,9 +168,11 @@ class ApplicationMaster(ApplicationMasterProtocol):
         if done:
             self._all_registered.set()
 
-    def heartbeat(self, task_id: str) -> None:
+    def heartbeat(self, task_id: str, progress: int | None = None) -> None:
         with self._lock:
             self._last_heartbeat[task_id] = time.monotonic()
+            if progress is not None:
+                self._progress[task_id] = progress
 
     def report_exit(self, task_id: str, status: int,
                     diagnostics: TaskDiagnostics | None = None) -> None:
@@ -258,9 +283,11 @@ class ApplicationMaster(ApplicationMasterProtocol):
                      resume_step: int | None = None) -> AttemptReport:
         t0 = time.monotonic()
         self._registrations.clear()
+        self._last_heartbeat.clear()
         self._exits.clear()
         self._exit_diagnostics.clear()
         self._stale_tasks.clear()
+        self._progress.clear()
         self._all_registered.clear()
 
         try:
@@ -315,16 +342,91 @@ class ApplicationMaster(ApplicationMasterProtocol):
             self.events.emit("am", "registration_timeout")
             ctx.cancel.set()
 
-        # monitor: heartbeats + exits
-        failed: list[str] = []
+        # monitor: heartbeats + exits + straggler detection
+        tracker = SpeculationTracker(self.speculation)
+        spec_copies: dict[str, SpeculativeCopy] = {}   # primary id -> copy
+        forgiven: set[str] = set()   # exec ids whose nonzero exit is benign
+        stragglers: list[str] = []
+        exec_by_id = {ex.task_id: ex for ex in executors}
         while True:
             with self._lock:
-                n_exit = len(self._exits)
-                any_fail = any(s != 0 for s in self._exits.values())
+                exits = dict(self._exits)
+                progress = dict(self._progress)
                 stale = [tid for tid, ts in self._last_heartbeat.items()
                          if tid not in self._exits
                          and time.monotonic() - ts > self.heartbeat_timeout_s]
-            if any_fail or stale:
+
+            # resolve speculation races: first finisher of the (primary,
+            # copy) pair wins; the loser is torn down as a TRANSIENT loser
+            # and its exit never fails the attempt or strikes its node
+            for tid, copy in spec_copies.items():
+                if copy.outcome:
+                    continue
+                p, s = exits.get(tid), exits.get(copy.exec_id)
+                if p == 0:
+                    copy.outcome = "cancelled"
+                    forgiven.add(copy.exec_id)
+                    copy.executor.cancel.set()
+                    self.events.emit("am", "speculative_cancelled",
+                                     task=tid, exec_id=copy.exec_id,
+                                     attempt=attempt,
+                                     reason="original finished first")
+                elif s == 0:
+                    copy.outcome = "won"
+                    forgiven.add(tid)
+                    if p is None:
+                        exec_by_id[tid].cancel.set()
+                    self.events.emit("am", "speculative_won",
+                                     task=tid, exec_id=copy.exec_id,
+                                     attempt=attempt,
+                                     node=copy.container.node_id)
+                elif s is not None:
+                    # the backup died (nonzero): keep the original running —
+                    # a failed backup alone never fails the attempt
+                    copy.outcome = "failed"
+                    forgiven.add(copy.exec_id)
+                    self.events.emit("am", "speculative_cancelled",
+                                     task=tid, exec_id=copy.exec_id,
+                                     attempt=attempt,
+                                     reason=f"speculative copy failed "
+                                            f"(exit {s}); original continues")
+
+            # straggler detection: compare each primary's heartbeat progress
+            # to the gang median; after `patience` consecutive lagging
+            # observations, launch a backup copy on a different node
+            if self.speculation.enabled and spec is not None \
+                    and not ctx.cancel.is_set():
+                gang = {t: p for t, p in progress.items()
+                        if not is_speculative_id(t)}
+                for tid in tracker.observe(gang):
+                    if tid in exits or tid in spec_copies:
+                        continue
+                    stragglers.append(tid)
+                    self.events.emit(
+                        "am", "straggler_detected", task=tid, attempt=attempt,
+                        progress=gang.get(tid), median=tracker.last_median,
+                        factor=self.speculation.slowdown_factor,
+                        patience=self.speculation.patience)
+                    copy = self._launch_speculative(exec_by_id[tid], spec,
+                                                    ctx, attempt)
+                    if copy is not None:
+                        spec_copies[tid] = copy
+                        tracker.note_launched()
+
+            # a primary's nonzero exit is excused when its backup won (or is
+            # still racing); a copy's exit never tears the gang down
+            real_failed = False
+            for xid, s in exits.items():
+                if s == 0 or xid in forgiven or is_speculative_id(xid):
+                    continue
+                copy = spec_copies.get(xid)
+                if copy is not None:
+                    cs = exits.get(copy.exec_id)
+                    if copy.outcome == "won" or cs == 0 or \
+                            (cs is None and copy.outcome == ""):
+                        continue
+                real_failed = True
+            if real_failed or stale:
                 ctx.cancel.set()   # teardown remaining tasks (paper §2.2)
                 for tid in stale:
                     if tid not in self._stale_tasks:
@@ -334,27 +436,47 @@ class ApplicationMaster(ApplicationMasterProtocol):
                         self._stale_tasks[tid] = diagnose_heartbeat_timeout(
                             tid, self.heartbeat_timeout_s)
                         self.events.emit("am", "heartbeat_lost", task=tid)
-            if n_exit == len(executors):
+            if len(exits) == len(executors) + len(spec_copies):
                 break
             time.sleep(0.01)
 
-        for ex in executors:
+        # races left undecided when the attempt ended: tear the copies down
+        for tid, copy in spec_copies.items():
+            if not copy.outcome:
+                copy.outcome = "cancelled"
+                forgiven.add(copy.exec_id)
+                copy.executor.cancel.set()
+                self.events.emit("am", "speculative_cancelled",
+                                 task=tid, exec_id=copy.exec_id,
+                                 attempt=attempt, reason="attempt torn down")
+
+        all_execs = executors + [c.executor for c in spec_copies.values()]
+        for ex in all_execs:
             ex.join(timeout=10.0)
-            self.task_logs[f"a{attempt}/{ex.task_id}"] = list(ex.log_lines)
+            self.task_logs[f"a{attempt}/{ex.exec_id}"] = list(ex.log_lines)
             if ex.metrics:
-                self.metrics[f"a{attempt}/{ex.task_id}"] = dict(ex.metrics)
+                self.metrics[f"a{attempt}/{ex.exec_id}"] = dict(ex.metrics)
 
         with self._lock:
             exits = dict(self._exits)
             exit_diags = dict(self._exit_diagnostics)
+        won = {tid for tid, c in spec_copies.items() if c.outcome == "won"}
         # a task that tripped the heartbeat timeout counts as failed even if
         # its child squeaked out a clean exit after the teardown began — the
         # node was presumed lost and the attempt was already torn down
-        # (otherwise the 143-vs-0 teardown race can mislabel the attempt)
+        # (otherwise the 143-vs-0 teardown race can mislabel the attempt).
+        # Speculation carve-outs: a primary whose backup won is not failed,
+        # and a copy's own exit never makes this list (its failure is the
+        # race outcome, not the attempt's).
         failed = sorted(set(
-            [tid for tid, s in exits.items() if s != 0]
-            + [tid for tid in self._last_heartbeat if tid not in exits]
-            + list(self._stale_tasks)))
+            [tid for tid, s in exits.items()
+             if s != 0 and tid not in won and tid not in forgiven
+             and not is_speculative_id(tid)]
+            + [tid for tid in self._last_heartbeat
+               if tid not in exits and not is_speculative_id(tid)
+               and tid not in won]
+            + [tid for tid in self._stale_tasks
+               if not is_speculative_id(tid) and tid not in won]))
 
         # attribute every failure: a child exception beats a heartbeat
         # timeout beats a bare exit code
@@ -368,17 +490,25 @@ class ApplicationMaster(ApplicationMasterProtocol):
                              classification=diag.classification.value,
                              reason=diag.describe())
             # charge INFRA failures to the hosting node so the RM can
-            # blacklist hosts that keep killing tasks (OOM, preemption storms)
+            # blacklist hosts that keep killing tasks (OOM, preemption
+            # storms); speculation losers never reach here, so a slow-but-
+            # alive node is never struck for losing a race
             if tid in node_of:
                 self.rm.report_node_failure(node_of[tid], diag)
         if not failed:
             for node in set(node_of.values()):
                 self.rm.report_node_success(node)
 
+        st = ContainerState.COMPLETED if not failed else ContainerState.FAILED
         for clist in containers.values():
             for c in clist:
-                st = ContainerState.COMPLETED if not failed else ContainerState.FAILED
                 self.rm.release(c.container_id, st)
+        for copy in spec_copies.values():
+            self.rm.release(copy.container.container_id, st)
+
+        nodes_report = dict(node_of)
+        nodes_report.update({c.exec_id: c.container.node_id
+                             for c in spec_copies.values()})
 
         # the chief publishes each completed checkpoint into the shared dict;
         # whatever survived this attempt seeds the next one's resume_step
@@ -388,4 +518,38 @@ class ApplicationMaster(ApplicationMasterProtocol):
                              resume_step=resume_step,
                              checkpoint_step=(int(ckpt_step)
                                               if ckpt_step is not None else None),
-                             nodes=node_of)
+                             nodes=nodes_report,
+                             stragglers=stragglers,
+                             speculation={tid: c.outcome
+                                          for tid, c in spec_copies.items()})
+
+    def _launch_speculative(self, primary: TaskExecutor, cluster_spec: dict,
+                            ctx: JobContext,
+                            attempt: int) -> SpeculativeCopy | None:
+        """Allocate a container off the straggler's node and start a backup
+        copy of the task. The copy skips registration (the gang spec is
+        pre-delivered) and the program skips rendezvous (env SPECULATIVE=1).
+        Returns None when the RM has no eligible capacity."""
+        tspec = self.job.tasks[primary.task_type]
+        req = ContainerRequest(tspec.resource, tspec.node_label)
+        try:
+            container = self.rm.allocate(
+                self.app_id, req,
+                exclude_nodes={primary.container.node_id})
+        except AllocationError as e:
+            self.events.emit("am", "speculative_cancelled",
+                             task=primary.task_id, exec_id="", attempt=attempt,
+                             reason=f"backup allocation failed: {e}")
+            return None
+        self.rm.mark_running(container.container_id)
+        ex = TaskExecutor(
+            primary.task_type, primary.index, container, self,
+            self.ml_program, self.job.args, ctx, self.ports, self.events,
+            chaos=self.chaos, speculative=True)
+        ex.deliver_cluster_spec(cluster_spec)
+        ex.start()
+        self.events.emit("am", "speculative_launched",
+                         task=primary.task_id, exec_id=ex.exec_id,
+                         attempt=attempt, node=container.node_id,
+                         avoided_node=primary.container.node_id)
+        return SpeculativeCopy(primary.task_id, ex.exec_id, ex, container)

@@ -39,6 +39,7 @@ class FaultKind(Enum):
     DROP_HEARTBEATS = "drop_heartbeats"  # suppress heartbeats for a window
     FAIL_ALLOCATION = "fail_allocation"  # RM.allocate raises
     PREEMPT = "preempt"                 # container reclaimed mid-attempt
+    SLOW_STEP = "slow_step"             # delay each step in a range (straggler)
 
     def __str__(self) -> str:
         return self.value
@@ -71,6 +72,15 @@ class FaultSpec:
     PREEMPT) fire ``after_s`` seconds into the task, DROP_HEARTBEATS for
     ``duration_s``. FAIL_ALLOCATION fires on allocate calls after skipping
     the first ``after_allocs``. ``count`` bounds total firings.
+
+    SLOW_STEP makes a task a *straggler* rather than a corpse: every step in
+    ``[at_step, until_step]`` (``until_step=None`` = to the end) is delayed
+    by ``delay_s`` seconds. The delay applies to the whole window; ``count``
+    only bounds how many ``chaos_injected`` events the spec emits (one per
+    (task, attempt) entering the window). Note on speculative copies: they
+    run under a ``#<copy>``-suffixed id (``worker:1#1``), so an exact task
+    pattern slows only the original while a type-wide ``worker:*`` pattern
+    slows backups too — target ``worker:1#1`` explicitly to slow a backup.
     """
     kind: FaultKind
     task: str = "worker:0"
@@ -80,6 +90,8 @@ class FaultSpec:
     duration_s: float = 0.0
     after_allocs: int = 0
     count: int = 1
+    until_step: int | None = None
+    delay_s: float = 0.0
 
     def matches_task(self, task_id: str) -> bool:
         if self.task == "*":
@@ -126,14 +138,17 @@ class FaultInjector:
 
     def __init__(self, plan: FaultPlan | None = None,
                  events: EventLog | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
         self.plan = plan or FaultPlan()
         self.events = events
         self.clock = clock
+        self.sleep = sleep                        # injectable for tests
         self._lock = threading.Lock()
         self._fired: dict[int, int] = {}          # spec index -> firings
         self._task_start: dict[tuple[str, int], float] = {}
         self._hb_dropping: set[tuple[int, str, int]] = set()
+        self._slowing: set[tuple[int, str, int]] = set()
         self._alloc_calls = 0
 
     @property
@@ -231,9 +246,12 @@ class FaultInjector:
 
     def check_step(self, task_id: str, attempt: int, step: int) -> None:
         """Raise the planned fault when (task, attempt, step) matches a
-        KILL_TASK or OOM spec. The ML program calls this once per step."""
+        KILL_TASK or OOM spec, and delay the step when it falls inside a
+        SLOW_STEP window (the straggler fault: slow, not dead). The ML
+        program calls this once per step."""
         if not self.enabled:
             return
+        delay = 0.0
         with self._lock:
             for idx, spec in self._specs(FaultKind.KILL_TASK):
                 if (spec.matches_task(task_id) and spec.matches_attempt(attempt)
@@ -249,6 +267,27 @@ class FaultInjector:
                     self._fire(idx, spec, task=task_id, attempt=attempt,
                                step=step, oom=True)
                     raise ChaosOOM(OOM_MESSAGE.format(nbytes=17_179_869_184))
+            for idx, spec in self._specs(FaultKind.SLOW_STEP):
+                if not (spec.matches_task(task_id)
+                        and spec.matches_attempt(attempt)):
+                    continue
+                lo = spec.at_step if spec.at_step is not None else 0
+                if step < lo or (spec.until_step is not None
+                                 and step > spec.until_step):
+                    continue
+                delay += spec.delay_s
+                key = (idx, task_id, attempt)
+                if key not in self._slowing and self._eligible(idx, spec):
+                    # one event per (task, attempt) entering the window; the
+                    # delay itself applies to every step in range
+                    self._slowing.add(key)
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               step=step, delay_s=spec.delay_s,
+                               until_step=spec.until_step)
+        if delay:
+            # sleep OUTSIDE the lock: a straggler must not slow the other
+            # tasks' chaos hooks, only itself
+            self.sleep(delay)
 
 
 #: Shared no-op injector — the production default everywhere chaos threads

@@ -22,6 +22,7 @@ from repro.core.events import EventLog
 from repro.core.failures import RetryPolicy, TaskDiagnostics
 from repro.core.resources import JobSpec
 from repro.core.rm import ResourceManager
+from repro.core.speculation import SpeculationPolicy
 from repro.core.task_executor import MLProgram
 
 
@@ -79,17 +80,20 @@ class YarnLikeBackend(SchedulerBackend):
     for YARN; swapping this class is the paper's scheduler-pluggability)."""
 
     def __init__(self, rm: ResourceManager, workdir: str = "",
-                 retry_policy: RetryPolicy | None = None):
+                 retry_policy: RetryPolicy | None = None,
+                 speculation: SpeculationPolicy | None = None):
         self.rm = rm
         self.workdir = workdir
         self.retry_policy = retry_policy
+        self.speculation = speculation
 
     def submit(self, job: JobSpec, archive_path: str,
                ml_program: MLProgram) -> JobHandle:
         app_id = self.rm.submit_application(job.name, job.queue)
         am = ApplicationMaster(self.rm, app_id, job, ml_program,
                                workdir=self.workdir,
-                               retry_policy=self.retry_policy)
+                               retry_policy=self.retry_policy,
+                               speculation=self.speculation)
         box: dict = {}
 
         def run():

@@ -35,6 +35,20 @@ RECOVERY_EVENT_KINDS = frozenset({
     "chaos_injected", "attempt_resumed", "node_blacklisted", "node_paroled",
 })
 
+#: Speculative-execution event kinds (core/speculation.py, emitted by the AM):
+#:   straggler_detected    — a task fell behind the gang median for the
+#:                           policy's patience window (progress, median)
+#:   speculative_launched  — a backup copy was started on another node
+#:   speculative_won       — the backup finished first; the original was
+#:                           torn down as a TRANSIENT loser
+#:   speculative_cancelled — the backup was torn down (original finished
+#:                           first, backup failed, allocation denied, or the
+#:                           attempt ended with the race undecided)
+SPECULATION_EVENT_KINDS = frozenset({
+    "straggler_detected", "speculative_launched", "speculative_won",
+    "speculative_cancelled",
+})
+
 
 class EventLog:
     def __init__(self):
@@ -58,9 +72,10 @@ class EventLog:
         return len(self.of_kind(kind))
 
     def failure_timeline(self) -> list[Event]:
-        """All failure-diagnostics + recovery events in order — the 'why did
-        my job fail (and how did it come back)' trail the history server
-        renders."""
+        """All failure-diagnostics + recovery + speculation events in order —
+        the 'why did my job fail (and how did it come back)' trail the
+        history server renders."""
         return [e for e in self.all()
                 if e.kind in FAILURE_EVENT_KINDS
-                or e.kind in RECOVERY_EVENT_KINDS]
+                or e.kind in RECOVERY_EVENT_KINDS
+                or e.kind in SPECULATION_EVENT_KINDS]

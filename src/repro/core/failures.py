@@ -48,6 +48,7 @@ FATAL_USER_EXCEPTIONS = frozenset({
 EXIT_PREEMPTED = 137        # SIGKILL by the scheduler
 EXIT_TEARDOWN = 143         # SIGTERM by the AM (sibling failed / cancel)
 EXIT_EXECUTOR_ERROR = 2     # the executor itself (not the child) broke
+EXIT_SPECULATION_LOST = 140  # torn down after losing a speculation race
 
 #: Exception types that mean the process ran out of memory outright.
 OOM_EXCEPTION_TYPES = frozenset({"MemoryError", "ChaosOOM"})
@@ -145,6 +146,10 @@ def diagnose_exit(task_id: str, status: int) -> TaskDiagnostics:
         EXIT_TEARDOWN: "torn down by the AM (a sibling task failed or the "
                        "attempt was cancelled)",
         EXIT_EXECUTOR_ERROR: "task executor error (not the ML program)",
+        EXIT_SPECULATION_LOST: "torn down after losing the speculative-"
+                               "execution race (a faster copy of this task "
+                               "finished first) — TRANSIENT, never charged "
+                               "to the hosting node",
         3: "cancelled before the job rendezvoused",
     }
     return TaskDiagnostics(

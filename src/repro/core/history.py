@@ -51,6 +51,11 @@ class JobHistoryServer:
             # checkpoint-aware recovery + node health, per the chaos subsystem
             "resumed_attempts": dict(e.result.resumed_attempts),
             "blacklisted_nodes": list(e.result.blacklisted_nodes),
+            # speculative execution: who lagged, and how each backup race
+            # ended ("a<attempt>/<task>" -> won | cancelled | failed)
+            "stragglers": sorted({t for r in e.result.attempts
+                                  for t in r.stragglers}),
+            "speculation": dict(e.result.speculation),
         }
 
     @staticmethod
@@ -105,7 +110,35 @@ class MetricsAnalyzer:
                 "*", "flaky",
                 f"job needed {len(result.attempts)} attempts; check task logs "
                 f"for transient failures"))
+        out.extend(self._straggler_suggestions(result))
         out.extend(self._failure_suggestions(result))
+        return out
+
+    @staticmethod
+    def _straggler_suggestions(result: JobResult) -> list[Suggestion]:
+        """Speculation advice: a won race means the original's host was
+        slow — point the operator at that node's health."""
+        out: list[Suggestion] = []
+        won = sorted(k for k, o in result.speculation.items() if o == "won")
+        if won:
+            nodes = sorted({
+                r.nodes.get(k.split("/", 1)[1], "?")
+                for r in result.attempts
+                for k in won if k.startswith(f"a{r.attempt}/")})
+            out.append(Suggestion(
+                "*", "straggler",
+                "speculative backups beat the originals for " + ", ".join(won)
+                + f"; the hosting node(s) {', '.join(nodes)} ran slow — "
+                  "check their health (thermal/IO/noisy neighbors) before "
+                  "the blacklist has to learn it the hard way"))
+        stragglers = sorted({t for r in result.attempts for t in r.stragglers})
+        if stragglers and not won:
+            out.append(Suggestion(
+                "*", "straggler",
+                "stragglers detected (" + ", ".join(stragglers)
+                + ") but no backup outran them; if this recurs, lower "
+                  "tony.speculation.slowdown-factor or patience so backups "
+                  "launch earlier"))
         return out
 
     @staticmethod

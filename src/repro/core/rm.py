@@ -13,7 +13,7 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Collection
 
 from repro.core.chaos import NO_CHAOS, FaultInjector
 from repro.core.events import EventLog
@@ -173,12 +173,15 @@ class ResourceManager:
             self.events.emit("rm", "app_state", app_id=app_id, state=state)
 
     # ------------------------------------------------------------------
-    def allocate(self, app_id: str, request: ContainerRequest) -> Container:
+    def allocate(self, app_id: str, request: ContainerRequest,
+                 exclude_nodes: Collection[str] = ()) -> Container:
         """Allocate one container honoring queue share + node labels.
 
         Raises AllocationError when the queue is over its share, no labelled
         node can fit the request, or a chaos plan injects a failure.
-        Blacklisted nodes (NodeHealthTracker) are excluded from placement.
+        Blacklisted nodes (NodeHealthTracker) are excluded from placement;
+        ``exclude_nodes`` additionally rules out specific hosts — the AM
+        uses it to keep a speculative backup off its straggler's node.
         """
         chaos_error = self.chaos.on_allocate(app_id)
         if chaos_error is not None:
@@ -194,6 +197,8 @@ class ResourceManager:
                     f"queue {queue!r} over capacity: used={q.used} ask={request.resource} limit={limit}")
             for node in sorted(self.nodes.values(),
                                key=lambda n: -n.available.memory_mb):
+                if node.node_id in exclude_nodes:
+                    continue
                 if request.node_label and request.node_label not in node.labels:
                     continue
                 if self.health.is_blacklisted(node.node_id):
@@ -212,7 +217,8 @@ class ResourceManager:
                                      gpus=request.resource.gpus)
                     return c
             raise AllocationError(
-                f"no node satisfies {request.resource} label={request.node_label!r}")
+                f"no node satisfies {request.resource} label={request.node_label!r}"
+                + (f" excluding {sorted(exclude_nodes)}" if exclude_nodes else ""))
 
     def allocate_many(self, app_id: str, request: ContainerRequest,
                       count: int) -> list[Container]:

@@ -1,0 +1,138 @@
+"""Speculative execution for straggler tasks (ROADMAP fault-tolerance item).
+
+Synchronous data-parallel training moves at the pace of its slowest member:
+one degraded host (thermal throttling, a dying disk, a noisy neighbour)
+stretches every step of the whole gang. The classic mitigation — speculative
+execution, as in MapReduce/Spark — is to launch a *backup copy* of the slow
+task on a different node and let the two race; the first copy to finish wins
+and the loser is torn down without prejudice.
+
+This module holds the policy + detection bookkeeping; the AM drives it:
+
+* Executors report per-step progress in their heartbeats (the ML program
+  calls ``ctx.step(task_id, attempt, step)`` once per training step).
+* The AM feeds the per-task progress map into a ``SpeculationTracker`` on
+  every monitor tick. A task whose progress has fallen behind the gang
+  *median* by ``slowdown_factor`` for ``patience`` consecutive observations
+  is flagged a straggler (``straggler_detected``).
+* The AM then asks the RM for one backup container — excluding the
+  straggler's node, and respecting the node blacklist like any allocation —
+  and launches a speculative ``TaskExecutor`` (``speculative_launched``).
+* First copy to finish wins: ``speculative_won`` when the backup beats the
+  original, ``speculative_cancelled`` when the original finishes first (or
+  the backup itself dies). The loser is torn down with
+  ``EXIT_SPECULATION_LOST`` — classified TRANSIENT and *never* charged to
+  its node, so speculation can never poison the blacklist.
+
+Speculative executors are addressed as ``<task_id>#<copy>`` (e.g.
+``worker:1#1``): the copy suffix keeps their heartbeats, exits, logs, and
+chaos hooks distinct from the original's. A chaos ``FaultSpec`` with an
+exact task pattern (``worker:1``) therefore does NOT hit the backup — which
+is what makes "the backup escapes the slow node" testable — while a
+type-wide pattern (``worker:*``) hits both copies.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Any
+
+#: Separator between a task id and its speculative-copy index.
+SPEC_COPY_SEP = "#"
+
+
+def speculative_id(task_id: str, copy: int = 1) -> str:
+    """Executor id of the ``copy``-th speculative copy of ``task_id``."""
+    return f"{task_id}{SPEC_COPY_SEP}{copy}"
+
+
+def primary_id(exec_id: str) -> str:
+    """Strip the copy suffix: ``worker:1#1`` -> ``worker:1``."""
+    return exec_id.split(SPEC_COPY_SEP, 1)[0]
+
+
+def is_speculative_id(exec_id: str) -> bool:
+    return SPEC_COPY_SEP in exec_id
+
+
+@dataclass(frozen=True)
+class SpeculationPolicy:
+    """When to consider a task a straggler, and how much to speculate.
+
+    A task is *lagging* when ``progress * slowdown_factor < gang_median``.
+    It becomes a straggler after ``patience`` consecutive lagging
+    observations (one observation per AM monitor tick, i.e. roughly per
+    heartbeat), and only once the gang median has reached ``min_progress``
+    — early steps are noisy (compile time, data warmup) and should never
+    trigger a backup. ``max_copies_per_attempt`` bounds the total number of
+    speculative launches in one attempt so a sick job cannot double its own
+    footprint.
+    """
+    enabled: bool = False
+    slowdown_factor: float = 2.0
+    patience: int = 5
+    min_progress: int = 4
+    max_copies_per_attempt: int = 2
+
+
+class SpeculationTracker:
+    """Per-attempt straggler bookkeeping (the AM owns one per attempt).
+
+    Not thread-safe by itself: the AM calls ``observe`` from its single
+    monitor loop with a snapshot of the progress map.
+    """
+
+    def __init__(self, policy: SpeculationPolicy):
+        self.policy = policy
+        self.launched = 0
+        self.last_median: float = 0.0
+        self._lag: dict[str, int] = {}
+        self._flagged: set[str] = set()
+
+    def lag_count(self, task_id: str) -> int:
+        return self._lag.get(task_id, 0)
+
+    def observe(self, progress: dict[str, int]) -> list[str]:
+        """Feed one snapshot of per-task progress (primaries only); returns
+        the tasks that just crossed the straggler threshold. Each task is
+        flagged at most once per attempt — the AM launches (or fails to
+        launch) one backup and the race resolves from there."""
+        pol = self.policy
+        if not pol.enabled or len(progress) < 2:
+            return []
+        self.last_median = statistics.median(progress.values())
+        if self.last_median < pol.min_progress:
+            return []
+        out: list[str] = []
+        for task_id, step in progress.items():
+            if task_id in self._flagged:
+                continue
+            if step * pol.slowdown_factor < self.last_median:
+                n = self._lag.get(task_id, 0) + 1
+                self._lag[task_id] = n
+                if n >= pol.patience and self.launched < pol.max_copies_per_attempt:
+                    self._flagged.add(task_id)
+                    out.append(task_id)
+            else:
+                # caught back up: straggling must be *consecutive*
+                self._lag.pop(task_id, None)
+        return out
+
+    def note_launched(self) -> None:
+        self.launched += 1
+
+
+@dataclass
+class SpeculativeCopy:
+    """One live backup: the AM's record of a speculation race in flight.
+
+    ``outcome`` is ``""`` while the race is undecided, then one of
+    ``won`` (backup finished first), ``cancelled`` (original finished first,
+    or the attempt was torn down), or ``failed`` (the backup itself died
+    while the original kept running).
+    """
+    task_id: str                  # the original (primary) task
+    exec_id: str                  # e.g. worker:1#1
+    executor: Any                 # the speculative TaskExecutor
+    container: Any                # its RM container
+    outcome: str = ""

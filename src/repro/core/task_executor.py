@@ -22,11 +22,13 @@ from repro.core.cluster_spec import TaskAddress, task_env
 from repro.core.events import EventLog
 from repro.core.failures import (
     EXIT_EXECUTOR_ERROR,
+    EXIT_SPECULATION_LOST,
     FailureClass,
     TaskDiagnostics,
     diagnose_exception,
 )
 from repro.core.resources import Container, PortAllocator
+from repro.core.speculation import speculative_id
 
 # MLProgram: (env, job_context) -> exit code
 MLProgram = Callable[[dict[str, str], "JobContext"], int]
@@ -80,6 +82,10 @@ class JobContext:
     # fault-injection hooks for the ML program (``ctx.chaos.check_step``);
     # NO_CHAOS by default so programs can call it unconditionally
     chaos: FaultInjector = None  # type: ignore[assignment]
+    # per-executor step progress (exec_id -> latest step), written by the ML
+    # program via ``report_progress``/``step`` and read by the executor's
+    # heartbeat loop — the AM's straggler detection feeds off it
+    progress: dict[str, int] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.barrier is None:
@@ -90,6 +96,17 @@ class JobContext:
     def rendezvous(self, timeout: float = 300.0) -> bool:
         return self.barrier.wait(self.cancel, timeout)
 
+    def report_progress(self, exec_id: str, step: int) -> None:
+        self.progress[exec_id] = step
+
+    def step(self, exec_id: str, attempt: int, step: int) -> None:
+        """One training step's orchestrator side: record progress (carried to
+        the AM by the next executor heartbeat, driving straggler detection)
+        and consult the chaos plan (which may delay the step — SLOW_STEP —
+        or raise a planned fault)."""
+        self.progress[exec_id] = step
+        self.chaos.check_step(exec_id, attempt, step)
+
 
 class TaskExecutor:
     HEARTBEAT_INTERVAL_S = 0.02
@@ -99,7 +116,8 @@ class TaskExecutor:
                  job_args: dict[str, str], ctx: JobContext,
                  ports: PortAllocator, events: EventLog,
                  is_chief_worker: bool = False,
-                 chaos: FaultInjector | None = None):
+                 chaos: FaultInjector | None = None,
+                 speculative: bool = False):
         self.task_type = task_type
         self.index = index
         self.container = container
@@ -112,6 +130,15 @@ class TaskExecutor:
         self.is_chief_worker = is_chief_worker
         self.chaos = chaos or ctx.chaos or NO_CHAOS
         self.task_id = f"{task_type}:{index}"
+        # a speculative backup copy runs the same (task_type, index) under a
+        # copy-suffixed id so its heartbeats/exits/logs/chaos hooks stay
+        # distinct from the original's; it skips registration (the gang's
+        # cluster spec is already built) — the AM pre-delivers the spec
+        self.speculative = speculative
+        self.exec_id = speculative_id(self.task_id) if speculative else self.task_id
+        # per-executor teardown, distinct from ctx.cancel (whole-gang): the
+        # AM sets this to kill one copy after a speculation race resolves
+        self.cancel = threading.Event()
         self.exit_status: int | None = None
         self.diagnostics: TaskDiagnostics | None = None
         self.log_lines: list[str] = []
@@ -122,7 +149,7 @@ class TaskExecutor:
 
     # ------------------------------------------------------------------
     def start(self) -> None:
-        self._thread = threading.Thread(target=self._run, name=f"executor-{self.task_id}",
+        self._thread = threading.Thread(target=self._run, name=f"executor-{self.exec_id}",
                                         daemon=True)
         self._thread.start()
 
@@ -139,17 +166,20 @@ class TaskExecutor:
 
     # ------------------------------------------------------------------
     def _run(self) -> None:
-        src = f"executor:{self.task_id}"
+        src = f"executor:{self.exec_id}"
         try:
-            # 1. port allocation + registration
+            # 1. port allocation + registration (speculative copies skip
+            # registration: the gang already rendezvoused and the cluster
+            # spec is pre-delivered by the AM before start())
             port = self.ports.allocate()
             addr = TaskAddress(self.task_type, self.index,
                                self.container.node_id, port)
             ui_port = None
-            if self.is_chief_worker:
-                ui_port = self.ports.allocate()  # TensorBoard analogue
-            self.events.emit(src, "task_registering", endpoint=addr.endpoint)
-            self.am.register_task(self, addr, ui_port=ui_port)
+            if not self.speculative:
+                if self.is_chief_worker:
+                    ui_port = self.ports.allocate()  # TensorBoard analogue
+                self.events.emit(src, "task_registering", endpoint=addr.endpoint)
+                self.am.register_task(self, addr, ui_port=ui_port)
 
             # 2. wait for the global cluster spec
             if not self._cluster_spec_ready.wait(timeout=60.0):
@@ -160,6 +190,8 @@ class TaskExecutor:
                            self.job_args)
             env["CONTAINER_ID"] = self.container.container_id
             env["UI_PORT"] = str(ui_port) if ui_port else ""
+            if self.speculative:
+                env["SPECULATIVE"] = "1"
             self.events.emit(src, "task_env_ready", world=env["WORLD_SIZE"])
 
             # 4. spawn the child + 5. heartbeat until done
@@ -174,30 +206,39 @@ class TaskExecutor:
                     result["exit"] = 1
                     # capture the failure for the AM: type, message and the
                     # full formatted traceback, pre-classified
-                    diag = diagnose_exception(self.task_id, e)
+                    diag = diagnose_exception(self.exec_id, e)
                     result["diag"] = diag
-                    self.ctx.shared[f"diag:{self.task_id}"] = diag.to_dict()
+                    self.ctx.shared[f"diag:{self.exec_id}"] = diag.to_dict()
 
-            child_t = threading.Thread(target=child, name=f"ml-{self.task_id}",
+            child_t = threading.Thread(target=child, name=f"ml-{self.exec_id}",
                                        daemon=True)
             child_t.start()
             attempt = int(self.ctx.shared.get("attempt", 1))
-            self.chaos.task_started(self.task_id, attempt)
+            self.chaos.task_started(self.exec_id, attempt)
             while child_t.is_alive():
-                if self.chaos.drop_heartbeat(self.task_id, attempt):
+                if self.chaos.drop_heartbeat(self.exec_id, attempt):
                     # chaos: simulated network partition — the AM sees a
                     # silent task and attributes a heartbeat timeout
                     pass
                 else:
-                    self.am.heartbeat(self.task_id)
+                    # heartbeats carry the child's latest step so the AM can
+                    # spot stragglers (core/speculation.py)
+                    self.am.heartbeat(self.exec_id,
+                                      progress=self.ctx.progress.get(self.exec_id))
                 if self.ctx.cancel.is_set():
                     # AM-initiated teardown: abandon the child (thread stand-in
                     # for SIGKILL on the real container process)
                     self.log("teardown requested; abandoning child")
                     result.setdefault("exit", 143)
                     break
+                if self.cancel.is_set():
+                    # this copy lost its speculation race — benign teardown,
+                    # classified TRANSIENT and never charged to the node
+                    self.log("lost the speculation race; torn down")
+                    result.setdefault("exit", EXIT_SPECULATION_LOST)
+                    break
                 if self.container.state.value == "preempted" or \
-                        self.chaos.should_preempt(self.task_id, attempt):
+                        self.chaos.should_preempt(self.exec_id, attempt):
                     # the scheduler reclaimed this container (capacity-
                     # scheduler preemption, organic or chaos-injected);
                     # report SIGKILL-style exit so the AM relaunches via the
@@ -209,18 +250,18 @@ class TaskExecutor:
 
             self.exit_status = int(result.get("exit", 0))
             self.diagnostics = result.get("diag")
-            self.metrics = dict(self.ctx.shared.get(f"metrics:{self.task_id}", {}))
+            self.metrics = dict(self.ctx.shared.get(f"metrics:{self.exec_id}", {}))
         except Exception as e:  # noqa: BLE001
             self.log(f"executor error: {e}")
             self.exit_status = EXIT_EXECUTOR_ERROR
             self.diagnostics = TaskDiagnostics(
-                task_id=self.task_id, exit_status=EXIT_EXECUTOR_ERROR,
+                task_id=self.exec_id, exit_status=EXIT_EXECUTOR_ERROR,
                 classification=FailureClass.INFRA,
                 exception_type=type(e).__name__, message=str(e),
                 traceback=traceback.format_exc())
         finally:
             self.events.emit(src, "task_finished", exit=self.exit_status)
-            self.am.report_exit(self.task_id, self.exit_status or 0,
+            self.am.report_exit(self.exec_id, self.exit_status or 0,
                                 diagnostics=self.diagnostics)
 
 
@@ -231,7 +272,7 @@ class ApplicationMasterProtocol:
                       ui_port: int | None = None) -> None:
         raise NotImplementedError
 
-    def heartbeat(self, task_id: str) -> None:
+    def heartbeat(self, task_id: str, progress: int | None = None) -> None:
         raise NotImplementedError
 
     def report_exit(self, task_id: str, status: int,

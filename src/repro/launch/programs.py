@@ -60,8 +60,13 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
         task_id = f"{task_type}:{index}"
         spec = json.loads(env["CLUSTER_SPEC"])
         attempt = int(ctx.shared.get("attempt", 1))
+        # a speculative backup copy joins an already-formed gang: it must
+        # not touch the rendezvous barrier (the gang already passed it) and
+        # keys its shared-dict entries under the copy-suffixed exec id
+        speculative = env.get("SPECULATIVE") == "1"
+        exec_id = task_id + "#1" if speculative else task_id
 
-        if not ctx.rendezvous(timeout=60.0):
+        if not speculative and not ctx.rendezvous(timeout=60.0):
             return 3  # cancelled before the job formed
 
         worker_types = [t for t in ("worker", "chief") if t in spec]
@@ -70,19 +75,31 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
 
         rc = 0
         if is_chief:
-            rc = _chief_train_loop(env, ctx, attempt, task_id)
+            rc = _chief_train_loop(env, ctx, attempt, exec_id)
         else:
             # non-chief: stay alive for the duration of the job ("the ML
-            # framework's distributed protocol" is collapsed into-process)
+            # framework's distributed protocol" is collapsed into-process),
+            # advancing its own step counter at the gang's pace through the
+            # chaos-gated ctx.step hook — so a SLOW_STEP fault makes this
+            # worker visibly lag the gang median (straggler detection) even
+            # though only the chief runs the real training loop
+            my_step = -1
             while not ctx.cancel.is_set() and not ctx.shared.get("train_done"):
-                time.sleep(0.005)
-            ctx.shared[f"metrics:{task_id}"] = {
+                lead = max((v for k, v in ctx.progress.items()
+                            if k != exec_id), default=-1)
+                if my_step < lead:
+                    my_step += 1
+                    ctx.step(exec_id, attempt, my_step)
+                else:
+                    time.sleep(0.002)
+            ctx.shared[f"metrics:{exec_id}"] = {
                 "peak_memory_mb": 64.0, "role": 0.0}
-        ctx.shared["train_done"] = True
-        ctx.rendezvous(timeout=30.0)
+        if not speculative:
+            ctx.shared["train_done"] = True
+            ctx.rendezvous(timeout=30.0)
         return rc
 
-    def _chief_train_loop(env, ctx: JobContext, attempt: int, task_id: str) -> int:
+    def _chief_train_loop(env, ctx: JobContext, attempt: int, exec_id: str) -> int:
         mesh = _local_mesh(strategy)
         t_start = time.monotonic()
         data = make_dataset(data_kind, batch_size, seq_len, cfg.vocab_size,
@@ -118,7 +135,9 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
             for step in range(start, steps):
                 if ctx.cancel.is_set():
                     return 143
-                ctx.chaos.check_step(task_id, attempt, step)
+                # records progress for straggler detection + runs the chaos
+                # hooks (which may delay or kill this step)
+                ctx.step(exec_id, attempt, step)
                 if fail_at is not None and (attempt, step) == fail_at:
                     raise RuntimeError(
                         f"injected transient failure at attempt={attempt} step={step}")
@@ -134,7 +153,7 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
                     # tell the AM which checkpoint the next attempt may
                     # resume from (its side of the resume_step contract)
                     ctx.shared["ckpt_step"] = step + 1
-            ctx.shared[f"metrics:{task_id}"] = {
+            ctx.shared[f"metrics:{exec_id}"] = {
                 "peak_memory_mb": float(
                     sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))
                     / 1e6),

@@ -21,6 +21,7 @@ from repro.core import (
     JobHistoryServer,
     MetricsAnalyzer,
     NodeHealthTracker,
+    SpeculationPolicy,
     TonYClient,
     YarnLikeBackend,
     format_failure_report,
@@ -75,6 +76,25 @@ def main() -> None:
                        help="generate N seeded random kill/OOM faults")
     chaos.add_argument("--blacklist-threshold", type=int, default=3,
                        help="INFRA failures on one node before blacklisting")
+    chaos.add_argument("--chaos-slow-task", default=None, metavar="TASK",
+                       help="inject a straggler: slow this task's steps "
+                            "(e.g. worker:1)")
+    chaos.add_argument("--chaos-slow-step", type=int, default=0,
+                       help="first slowed step (with --chaos-slow-task)")
+    chaos.add_argument("--chaos-slow-until", type=int, default=None,
+                       help="last slowed step (default: every step onward)")
+    chaos.add_argument("--chaos-slow-delay", type=float, default=0.05,
+                       help="extra seconds added to each slowed step")
+    spec = ap.add_argument_group(
+        "speculation", "straggler detection + backups (core/speculation.py)")
+    spec.add_argument("--speculation", action="store_true",
+                      help="enable speculative execution for stragglers")
+    spec.add_argument("--speculation-factor", type=float, default=2.0,
+                      help="lagging iff progress * factor < gang median")
+    spec.add_argument("--speculation-patience", type=int, default=5,
+                      help="consecutive lagging observations before a backup")
+    spec.add_argument("--speculation-min-progress", type=int, default=4,
+                      help="gang median step before detection arms")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -91,6 +111,11 @@ def main() -> None:
         plan = FaultPlan(plan.seed, plan.faults + FaultPlan.random_plan(
             args.chaos_seed, steps=args.steps,
             n_faults=args.chaos_random_faults).faults)
+    if args.chaos_slow_task:
+        plan = plan.add(FaultSpec(FaultKind.SLOW_STEP, task=args.chaos_slow_task,
+                                  at_step=args.chaos_slow_step,
+                                  until_step=args.chaos_slow_until,
+                                  delay_s=args.chaos_slow_delay))
 
     events = EventLog()
     rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=2, gpus_per_node=4,
@@ -98,7 +123,12 @@ def main() -> None:
                       chaos=FaultInjector(plan, events=events),
                       health=NodeHealthTracker(
                           threshold=args.blacklist_threshold, events=events))
-    client = TonYClient(YarnLikeBackend(rm))
+    speculation = SpeculationPolicy(
+        enabled=args.speculation,
+        slowdown_factor=args.speculation_factor,
+        patience=args.speculation_patience,
+        min_progress=args.speculation_min_progress)
+    client = TonYClient(YarnLikeBackend(rm, speculation=speculation))
     job = build_job(f"train-{cfg.name}", args.workers, args.ps)
 
     steps_log = []
@@ -123,6 +153,8 @@ def main() -> None:
         "retry_advice": summary["retry_advice"],
         "resumed_attempts": summary["resumed_attempts"],
         "blacklisted_nodes": summary["blacklisted_nodes"],
+        "stragglers": summary["stragglers"],
+        "speculation": summary["speculation"],
         "chaos_injected": events.count("chaos_injected"),
         "ckpt_dir": ckpt_dir,
     }, indent=2))

@@ -36,6 +36,8 @@ from repro.core import (
 )
 from repro.core.failures import diagnose_exception, is_oom_signature
 
+pytestmark = pytest.mark.chaos
+
 CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "1234"))
 
 
@@ -167,6 +169,38 @@ def test_node_health_blacklist_and_parole():
     assert ev.count("node_paroled") == 1
     assert tr.record_failure("n0", _infra_diag())  # single strike re-trips
     assert tr.is_blacklisted("n0")
+
+
+def test_node_health_parole_edge_restrike_vs_clean_wipe():
+    """The parole contract's two exits: a paroled node is ONE strike from
+    re-blacklisting (not a clean slate), but a clean attempt wipes every
+    strike — including the parole residue."""
+    t = [0.0]
+    ev = EventLog()
+    tr = NodeHealthTracker(threshold=2, parole_s=10.0, clock=lambda: t[0],
+                           events=ev)
+    tr.record_failure("n0", _infra_diag())
+    assert tr.record_failure("n0", _infra_diag())      # blacklisted
+    t[0] = 10.0
+    assert not tr.is_blacklisted("n0")                 # paroled
+    assert tr.snapshot()["failures"]["n0"] == tr.threshold - 1
+    # exit A: one more INFRA strike re-blacklists immediately
+    assert tr.record_failure("n0", _infra_diag())
+    assert tr.is_blacklisted("n0")
+    assert ev.count("node_blacklisted") == 2 and ev.count("node_paroled") == 1
+    # exit B (fresh tracker): a clean attempt after parole wipes strikes, so
+    # one later strike must NOT re-blacklist (it is strike 1 of 2 again)
+    t2 = [0.0]
+    tr2 = NodeHealthTracker(threshold=2, parole_s=10.0, clock=lambda: t2[0])
+    tr2.record_failure("n1", _infra_diag())
+    tr2.record_failure("n1", _infra_diag())
+    t2[0] = 10.0
+    assert not tr2.is_blacklisted("n1")
+    tr2.record_success("n1")                           # clean attempt
+    assert tr2.snapshot()["failures"] == {}
+    assert not tr2.record_failure("n1", _infra_diag())
+    assert not tr2.is_blacklisted("n1")
+    assert tr2.record_failure("n1", _infra_diag())     # second strike trips
 
 
 def test_node_health_only_infra_counts_and_success_resets():
@@ -404,6 +438,71 @@ def test_gang_that_cannot_fit_fails_cleanly_without_leaks():
     assert ev.count("container_preempted") == 0
     assert not rm.live_containers()
     assert rm.invariants_ok()
+
+
+class _ModuleProxy:
+    """Stand-in for a module the checkpointer imported, with chosen
+    attributes overridden — patches stay local to the checkpointer module
+    instead of mutating numpy/json/os globally."""
+
+    def __init__(self, mod, **overrides):
+        self._mod = mod
+        self._overrides = overrides
+
+    def __getattr__(self, name):
+        if name in self._overrides:
+            return self._overrides[name]
+        return getattr(self._mod, name)
+
+
+def test_checkpoint_kill_points_never_expose_uncommitted_step(tmp_path,
+                                                              monkeypatch):
+    """Deterministic twin of the hypothesis property (test_property.py):
+    hard-kill the checkpoint writer at each op inside save_pytree — during
+    the array write, during the COMMIT-marker write, and at the atomic
+    rename — leaving its debris behind (a real SIGKILL runs no finally);
+    latest_step/restore must never observe the uncommitted step."""
+    import json
+    import shutil
+
+    import numpy as np
+
+    import repro.checkpoint.checkpointer as ck
+    from repro.core import ChaosKill
+
+    tree1 = {"w": np.ones((2, 2), np.float32)}
+    tree2 = {"w": np.full((2, 2), 7.0, np.float32)}
+
+    def killer(*a, **k):
+        raise ChaosKill("chaos: checkpoint writer killed mid-op")
+
+    kill_points = {
+        "during_array_write": ("np", np, {"savez": killer}),
+        "during_commit_write": ("json", json, {"dump": killer}),
+        "at_atomic_rename": ("os", os, {"replace": killer}),
+    }
+    for label, (attr, mod, over) in kill_points.items():
+        d = str(tmp_path / label)
+        ck.save_pytree(tree1, d, 1)            # committed baseline
+        monkeypatch.setattr(ck, attr, _ModuleProxy(mod, **over))
+        # a hard kill runs no cleanup: keep the staging debris on disk
+        monkeypatch.setattr(ck, "shutil",
+                            _ModuleProxy(shutil, rmtree=lambda *a, **k: None))
+        with pytest.raises(ChaosKill):
+            ck.save_pytree(tree2, d, 2)
+        monkeypatch.undo()
+        # debris may exist, but the committed view is untouched
+        assert ck.latest_step(d) == 1, label
+        assert not ck.is_committed(d, 2), label
+        back = ck.restore_pytree({"w": np.zeros((2, 2), np.float32)}, d)
+        np.testing.assert_array_equal(back["w"], tree1["w"])
+    # a marker-less step dir (manual copy, interrupted writer) is equally
+    # invisible to latest_step and restore
+    d = str(tmp_path / "during_array_write")
+    os.makedirs(os.path.join(d, "step_00000009"), exist_ok=True)
+    assert ck.latest_step(d) == 1
+    with pytest.raises(FileNotFoundError):
+        ck.restore_pytree(tree1, d, 9)
 
 
 def test_try_preempt_for_under_chaos_allocation_failures():

@@ -204,9 +204,9 @@ def test_heartbeat_timeout_classified_transient():
     # drop worker:0's heartbeats (a hung task / lost node)
     real_heartbeat = ApplicationMaster.heartbeat
 
-    def dropping(task_id):
+    def dropping(task_id, progress=None):
         if task_id != "worker:0":
-            real_heartbeat(am, task_id)
+            real_heartbeat(am, task_id, progress)
 
     am.heartbeat = dropping
     res = am.run()

@@ -129,6 +129,78 @@ def test_checkpoint_roundtrip_property(tree, step):
 
 
 # ----------------------------------------------------------------------
+# Checkpoint commit protocol: arbitrary kill points never expose a partial
+# step (latest_step only ever names a fully committed directory)
+
+
+class _ModuleProxy:
+    """A module stand-in with chosen attributes overridden — patches the
+    checkpointer module's view only, not numpy/json/os globally."""
+
+    def __init__(self, mod, **overrides):
+        self._mod = mod
+        self._overrides = overrides
+
+    def __getattr__(self, name):
+        if name in self._overrides:
+            return self._overrides[name]
+        return getattr(self._mod, name)
+
+
+class _Killed(RuntimeError):
+    pass
+
+
+@SETTINGS
+@given(st.integers(0, 3), st.integers(2, 10 ** 6))
+def test_checkpoint_kill_point_never_corrupts_latest(kill_op, step):
+    """kill_op: 0 = no kill, 1 = during array write, 2 = during COMMIT
+    write, 3 = at the atomic rename. The kill leaves all debris in place (a
+    hard kill runs no finally). Invariant: latest_step names the new step
+    iff every op completed; otherwise the previous checkpoint is intact."""
+    import json
+    import os
+    import shutil
+    import tempfile
+
+    import repro.checkpoint.checkpointer as ck
+
+    def killer(*a, **k):
+        raise _Killed
+
+    tree1 = {"w": np.ones((3,), np.float32)}
+    tree2 = {"w": np.full((3,), 7.0, np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(tree1, d, 1)
+        saved = (ck.np, ck.json, ck.os, ck.shutil)
+        try:
+            if kill_op == 1:
+                ck.np = _ModuleProxy(np, savez=killer)
+            elif kill_op == 2:
+                ck.json = _ModuleProxy(json, dump=killer)
+            elif kill_op == 3:
+                ck.os = _ModuleProxy(os, replace=killer)
+            if kill_op:
+                ck.shutil = _ModuleProxy(shutil,
+                                         rmtree=lambda *a, **k: None)
+                with pytest.raises(_Killed):
+                    ck.save_pytree(tree2, d, step)
+            else:
+                ck.save_pytree(tree2, d, step)
+        finally:
+            ck.np, ck.json, ck.os, ck.shutil = saved
+        if kill_op:
+            assert ck.latest_step(d) == 1
+            assert not ck.is_committed(d, step)
+            back = restore_pytree({"w": np.zeros((3,), np.float32)}, d)
+            np.testing.assert_array_equal(back["w"], tree1["w"])
+        else:
+            assert ck.latest_step(d) == step
+            back = restore_pytree({"w": np.zeros((3,), np.float32)}, d, step)
+            np.testing.assert_array_equal(back["w"], tree2["w"])
+
+
+# ----------------------------------------------------------------------
 # Sharding rules: produced specs always divide the dims they shard
 
 axes_st = st.lists(st.sampled_from(["embed", "mlp", "heads", "kv_heads",

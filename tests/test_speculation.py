@@ -1,0 +1,310 @@
+"""Speculative execution for straggler tasks (core/speculation.py + AM).
+
+Everything runs against a *seeded* FaultPlan (CHAOS_SEED, overridable in CI):
+the SLOW_STEP fault makes one worker a deterministic straggler, the AM's
+detection flags it off heartbeat progress, and the backup race resolves the
+same way every run.
+"""
+import os
+import time
+
+import pytest
+
+from repro.core import (
+    EXIT_SPECULATION_LOST,
+    EventLog,
+    FailureClass,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    JobHistoryServer,
+    MetricsAnalyzer,
+    SpeculationPolicy,
+    SpeculationTracker,
+    TonYClient,
+    YarnLikeBackend,
+    classify_exit,
+    is_speculative_id,
+    job_spec_from_props,
+    make_cluster,
+    primary_id,
+    speculative_id,
+)
+from repro.core.failures import diagnose_exit
+
+pytestmark = pytest.mark.chaos
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "1234"))
+
+SPEC_EVENTS = ("straggler_detected", "speculative_launched",
+               "speculative_won", "speculative_cancelled")
+
+
+def _job(workers=3, attempts=3):
+    return job_spec_from_props({
+        "tony.application.name": "speculation",
+        "tony.application.max-attempts": str(attempts),
+        "tony.worker.instances": str(workers),
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+
+
+def make_gang_program(steps, work_s=0.01):
+    """Every worker steps in lockstep-ish; a speculative copy joins the
+    already-formed gang (skips rendezvous) under its #1 exec id."""
+
+    def program(env, ctx):
+        tid = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        speculative = env.get("SPECULATIVE") == "1"
+        exec_id = tid + "#1" if speculative else tid
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not speculative and not ctx.rendezvous(timeout=10):
+            return 3
+        for step in range(steps):
+            if ctx.cancel.is_set():
+                return 143
+            ctx.step(exec_id, attempt, step)
+            time.sleep(work_s)
+        return 0
+
+    return program
+
+
+def _chaos_cluster(plan, **kw):
+    ev = EventLog()
+    rm = make_cluster(event_log=ev, chaos=FaultInjector(plan, events=ev), **kw)
+    return rm, ev
+
+
+# ----------------------------------------------------------------------
+# Unit: exec-id convention + loser classification
+
+
+def test_speculative_id_roundtrip():
+    assert speculative_id("worker:1") == "worker:1#1"
+    assert speculative_id("worker:1", copy=2) == "worker:1#2"
+    assert primary_id("worker:1#1") == "worker:1"
+    assert primary_id("worker:1") == "worker:1"
+    assert is_speculative_id("worker:1#1")
+    assert not is_speculative_id("worker:1")
+
+
+def test_speculation_lost_exit_is_transient_and_explained():
+    # the loser's teardown must never look like an infra problem — that is
+    # what keeps races from striking nodes into the blacklist
+    assert classify_exit(EXIT_SPECULATION_LOST) is FailureClass.TRANSIENT
+    d = diagnose_exit("worker:1", EXIT_SPECULATION_LOST)
+    assert "speculat" in d.message and d.classification is FailureClass.TRANSIENT
+
+
+# ----------------------------------------------------------------------
+# Unit: SpeculationTracker detection rule
+
+
+def test_tracker_flags_after_patience_consecutive_lags():
+    tr = SpeculationTracker(SpeculationPolicy(
+        enabled=True, slowdown_factor=2.0, patience=3, min_progress=4))
+    # median below min_progress: detection not armed yet
+    assert tr.observe({"worker:0": 2, "worker:1": 1, "worker:2": 2}) == []
+    assert tr.lag_count("worker:1") == 0
+    # lagging (1*2 < median 8) but patience not yet reached
+    assert tr.observe({"worker:0": 8, "worker:1": 1, "worker:2": 8}) == []
+    assert tr.observe({"worker:0": 9, "worker:1": 1, "worker:2": 9}) == []
+    assert tr.lag_count("worker:1") == 2
+    flagged = tr.observe({"worker:0": 10, "worker:1": 2, "worker:2": 10})
+    assert flagged == ["worker:1"]
+    assert tr.last_median == 10
+    # flagged at most once per attempt
+    assert tr.observe({"worker:0": 11, "worker:1": 2, "worker:2": 11}) == []
+
+
+def test_tracker_lag_must_be_consecutive_and_needs_a_gang():
+    tr = SpeculationTracker(SpeculationPolicy(
+        enabled=True, slowdown_factor=2.0, patience=2, min_progress=1))
+    assert tr.observe({"worker:0": 10}) == []           # no gang, no median
+    assert tr.observe({"worker:0": 10, "worker:1": 1}) == []
+    tr.observe({"worker:0": 10, "worker:1": 10})        # caught up: reset
+    assert tr.lag_count("worker:1") == 0
+    assert tr.observe({"worker:0": 12, "worker:1": 1}) == []
+    assert tr.observe({"worker:0": 13, "worker:1": 1}) == ["worker:1"]
+
+
+def test_tracker_respects_copy_budget_and_disabled_policy():
+    assert SpeculationTracker(SpeculationPolicy(enabled=False)).observe(
+        {"a": 100, "b": 1}) == []
+    tr = SpeculationTracker(SpeculationPolicy(
+        enabled=True, patience=1, min_progress=1, max_copies_per_attempt=1))
+    assert tr.observe({"a": 10, "b": 10, "c": 1}) == ["c"]
+    tr.note_launched()
+    # budget spent: a second straggler is not flagged
+    assert tr.observe({"a": 20, "b": 1, "c": 1}) == []
+
+
+# ----------------------------------------------------------------------
+# Unit: SLOW_STEP chaos fault (fake sleep — no wall-clock in the unit)
+
+
+def test_slow_step_delays_only_the_window_and_matching_task():
+    slept = []
+    inj = FaultInjector(
+        FaultPlan(seed=CHAOS_SEED).add(
+            FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=2,
+                      until_step=4, delay_s=0.25)),
+        events=(ev := EventLog()), sleep=slept.append)
+    for step in range(7):
+        inj.check_step("worker:1", 1, step)
+    inj.check_step("worker:0", 1, 3)          # different task: untouched
+    inj.check_step("worker:1#1", 1, 3)        # exact pattern misses the copy
+    assert slept == [0.25, 0.25, 0.25]        # steps 2, 3, 4 only
+    # one chaos_injected per (task, attempt) entering the window
+    assert ev.count("chaos_injected") == 1
+    p = ev.of_kind("chaos_injected")[0].payload
+    assert p["fault"] == "slow_step" and p["delay_s"] == 0.25
+
+
+def test_slow_step_wildcard_hits_speculative_copies_too():
+    slept = []
+    inj = FaultInjector(
+        FaultPlan(seed=CHAOS_SEED).add(
+            FaultSpec(FaultKind.SLOW_STEP, task="worker:*", delay_s=0.1)),
+        sleep=slept.append)
+    inj.check_step("worker:1", 1, 0)
+    inj.check_step("worker:1#1", 1, 0)
+    inj.check_step("ps:0", 1, 0)
+    assert slept == [0.1, 0.1]
+
+
+# ----------------------------------------------------------------------
+# Unit: RM allocation exclusion (keeps the backup off the straggler's node)
+
+
+def test_allocate_exclude_nodes():
+    from repro.core import AllocationError, ContainerRequest, Resource
+    rm = make_cluster(num_gpu_nodes=2, num_cpu_nodes=0)
+    app = rm.submit_application("x", "default")
+    req = ContainerRequest(Resource(1024, 1, 1), "gpu")
+    c = rm.allocate(app, req, exclude_nodes={"gpu-node-0"})
+    assert c.node_id == "gpu-node-1"
+    with pytest.raises(AllocationError, match="excluding"):
+        rm.allocate(app, req, exclude_nodes={"gpu-node-0", "gpu-node-1"})
+    rm.release(c.container_id)
+    assert rm.invariants_ok()
+
+
+# ----------------------------------------------------------------------
+# Tentpole e2e: injected straggler -> detection -> backup wins
+
+
+def test_backup_wins_race_and_straggler_node_is_never_struck():
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=2,
+                  delay_s=0.08))
+    rm, ev = _chaos_cluster(plan)
+    pol = SpeculationPolicy(enabled=True, slowdown_factor=2.0, patience=3,
+                            min_progress=4)
+    job = _job()
+    res = TonYClient(YarnLikeBackend(rm, speculation=pol)).run_and_wait(
+        job, make_gang_program(12), timeout=60)
+
+    assert res.succeeded and len(res.attempts) == 1
+    a = res.attempts[0]
+    assert a.stragglers == ["worker:1"]
+    assert a.speculation == {"worker:1": "won"}
+    assert res.speculation == {"a1/worker:1": "won"}
+    # the original was torn down as the loser, not as a failure
+    assert a.exit_statuses["worker:1"] == EXIT_SPECULATION_LOST
+    assert a.exit_statuses["worker:1#1"] == 0
+    assert a.failed_tasks == [] and res.diagnostics == {}
+    # the backup ran on a different node than the straggler
+    assert a.nodes["worker:1#1"] != a.nodes["worker:1"]
+    # losing a race never charges the slow (but alive) node
+    assert rm.health.snapshot()["failures"] == {}
+    assert res.blacklisted_nodes == []
+    # the full event trail, once each, and on the failure timeline
+    counts = {k: ev.count(k) for k in SPEC_EVENTS}
+    assert counts == {"straggler_detected": 1, "speculative_launched": 1,
+                      "speculative_won": 1, "speculative_cancelled": 0}
+    launched = ev.of_kind("speculative_launched")[0].payload
+    assert launched["exec_id"] == "worker:1#1"
+    assert launched["avoided_node"] == a.nodes["worker:1"]
+    timeline = {e.kind for e in ev.failure_timeline()}
+    assert {"straggler_detected", "speculative_won"} <= timeline
+    # the loser's copy log exists under its exec id
+    assert "a1/worker:1#1" in res.task_logs
+    assert not rm.live_containers() and rm.invariants_ok()
+
+    # history + analyzer surface the race
+    hist = JobHistoryServer()
+    hist.record(job, res)
+    s = hist.summary(res.app_id)
+    assert s["stragglers"] == ["worker:1"]
+    assert s["speculation"] == {"a1/worker:1": "won"}
+    sugg = [g for g in MetricsAnalyzer().analyze(job, res)
+            if g.kind == "straggler"]
+    assert len(sugg) == 1 and a.nodes["worker:1"] in sugg[0].message
+
+
+def test_original_wins_race_and_backup_is_cancelled_cleanly():
+    # the original is slow only for steps 1-3 then recovers; the backup is
+    # slowed its whole life (exact copy-id pattern) -> the original wins
+    plan = (FaultPlan(seed=CHAOS_SEED)
+            .add(FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=1,
+                           until_step=3, delay_s=0.08))
+            .add(FaultSpec(FaultKind.SLOW_STEP, task="worker:1#1",
+                           delay_s=0.05)))
+    rm, ev = _chaos_cluster(plan)
+    pol = SpeculationPolicy(enabled=True, slowdown_factor=2.0, patience=2,
+                            min_progress=3)
+    res = TonYClient(YarnLikeBackend(rm, speculation=pol)).run_and_wait(
+        _job(), make_gang_program(10, work_s=0.02), timeout=60)
+
+    assert res.succeeded and len(res.attempts) == 1
+    a = res.attempts[0]
+    assert a.speculation == {"worker:1": "cancelled"}
+    assert a.exit_statuses["worker:1"] == 0
+    assert a.exit_statuses["worker:1#1"] == EXIT_SPECULATION_LOST
+    assert a.failed_tasks == [] and res.diagnostics == {}
+    assert ev.count("speculative_won") == 0
+    cancelled = ev.of_kind("speculative_cancelled")
+    assert len(cancelled) == 1
+    assert cancelled[0].payload["reason"] == "original finished first"
+    assert rm.health.snapshot()["failures"] == {}
+    assert not rm.live_containers() and rm.invariants_ok()
+
+
+def test_speculation_denied_when_no_other_node_fits():
+    # single GPU node: the backup has nowhere to go (the straggler's own
+    # node is excluded) — the AM degrades gracefully and the job still
+    # finishes, just at straggler pace
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=2,
+                  delay_s=0.04))
+    rm, ev = _chaos_cluster(plan, num_gpu_nodes=1, num_cpu_nodes=0)
+    pol = SpeculationPolicy(enabled=True, slowdown_factor=2.0, patience=3,
+                            min_progress=4)
+    res = TonYClient(YarnLikeBackend(rm, speculation=pol)).run_and_wait(
+        _job(), make_gang_program(12), timeout=60)
+    assert res.succeeded and len(res.attempts) == 1
+    assert res.attempts[0].stragglers == ["worker:1"]
+    assert res.attempts[0].speculation == {}          # nothing launched
+    assert ev.count("straggler_detected") == 1
+    assert ev.count("speculative_launched") == 0
+    cancelled = ev.of_kind("speculative_cancelled")
+    assert len(cancelled) == 1
+    assert "backup allocation failed" in cancelled[0].payload["reason"]
+    assert not rm.live_containers() and rm.invariants_ok()
+
+
+def test_speculation_disabled_by_default_no_detection():
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.SLOW_STEP, task="worker:1", at_step=2,
+                  delay_s=0.03))
+    rm, ev = _chaos_cluster(plan)
+    res = TonYClient(YarnLikeBackend(rm)).run_and_wait(
+        _job(), make_gang_program(10), timeout=60)
+    assert res.succeeded
+    assert all(ev.count(k) == 0 for k in SPEC_EVENTS)
+    assert res.attempts[0].speculation == {} and res.speculation == {}
