@@ -6,14 +6,19 @@ from __future__ import annotations
 import time
 
 from repro.core import (
+    ApplicationMaster,
     ContainerRequest,
     EventLog,
+    FailureClass,
     FaultInjector,
     FaultKind,
     FaultPlan,
     FaultSpec,
+    NodeHealthTracker,
     Resource,
+    RetryPolicy,
     SpeculationPolicy,
+    TaskDiagnostics,
     TonYClient,
     YarnLikeBackend,
     job_spec_from_props,
@@ -169,6 +174,76 @@ def bench_speculation_straggler() -> list[tuple[str, float, str]]:
              f"backup wins; speedup={t_off / t_on:.2f}x")]
 
 
+def bench_elastic_resize() -> list[tuple[str, float, str]]:
+    """Degraded throughput vs. failed-job JCT: a 4-worker job on a cluster
+    with only 3 usable slots. Rigid gangs burn the negotiation window and
+    every retry; an elastic (min-instances=2) gang downsizes to 3 and
+    finishes — wasted wall-clock vs. useful degraded work."""
+    steps, work_s = 8, 0.005
+
+    def gang_program(env, ctx):
+        tid = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not ctx.rendezvous(timeout=30, exec_id=tid, attempt=attempt):
+            return 3
+        if tid == "worker:0":
+            try:
+                for step in range(steps):
+                    if ctx.cancel.is_set():
+                        return 143
+                    ctx.step(tid, attempt, step)
+                    time.sleep(work_s)
+            finally:
+                ctx.shared["done"] = True
+        else:
+            while not ctx.cancel.is_set() and not ctx.shared.get("done"):
+                time.sleep(0.002)
+        ctx.rendezvous(timeout=5, exec_id=tid, attempt=attempt)
+        return 0
+
+    def run(elastic: bool) -> tuple[float, bool]:
+        ev = EventLog()
+        health = NodeHealthTracker(threshold=1, parole_s=3600.0, events=ev)
+        rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=0, gpus_per_node=1,
+                          memory_mb=2048, vcores=4, event_log=ev,
+                          health=health)
+        health.record_failure("gpu-node-0", TaskDiagnostics(
+            task_id="worker:0", exit_status=137,
+            classification=FailureClass.INFRA, message="pre-struck"))
+        props = {
+            "tony.application.name": "bench-elastic",
+            "tony.application.max-attempts": "2",
+            "tony.worker.instances": "4",
+            "tony.worker.memory": "1024",
+            "tony.worker.gpus": "1",
+            "tony.worker.node-label": "gpu",
+        }
+        if elastic:
+            props["tony.worker.min-instances"] = "2"
+        job = job_spec_from_props(props)
+        app_id = rm.submit_application(job.name, job.queue)
+        am = ApplicationMaster(
+            rm, app_id, job, gang_program,
+            retry_policy=RetryPolicy(max_attempts=2).with_clock(lambda s: None))
+        am.NEGOTIATION_TIMEOUT_S = 0.4
+        t0 = time.monotonic()
+        res = am.run()
+        dt = time.monotonic() - t0
+        assert not rm.live_containers() and rm.invariants_ok()
+        if elastic:
+            assert res.succeeded and res.resized_attempts == {1: {"worker": 3}}
+        else:
+            assert not res.succeeded   # rigid gang can never fit
+        return dt, res.succeeded
+
+    t_rigid, _ = run(False)
+    t_elastic, _ = run(True)
+    return [("elastic_rigid_fails", t_rigid * 1e6,
+             "4-worker rigid gang on 3 slots: all wall-clock wasted"),
+            ("elastic_degraded_completes", t_elastic * 1e6,
+             "min-instances=2 downsizes to 3 and finishes")]
+
+
 def all_benches() -> list[tuple[str, float, str]]:
     rows = []
     rows += bench_allocation_throughput()
@@ -176,4 +251,5 @@ def all_benches() -> list[tuple[str, float, str]]:
     rows += bench_cluster_spec_barrier()
     rows += bench_fault_recovery_overhead()
     rows += bench_speculation_straggler()
+    rows += bench_elastic_resize()
     return rows

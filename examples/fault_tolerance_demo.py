@@ -13,6 +13,13 @@ lagging the gang median in heartbeat progress, launches a backup copy on a
 different node, the backup wins the race, and the slow original is torn
 down as a TRANSIENT loser without ever striking its node.
 
+Act 3 — elastic shrink and regrow: a blacklisted node leaves a 4-worker
+(min-instances=2) job only 3 slots, so instead of burning the negotiation
+window and dying, the AM downsizes the gang to 3 and launches the attempt
+degraded. A chaos kill forces a retry whose backoff outlives the bad node's
+parole — and because every attempt asks for the full gang first, attempt 2
+regrows to 4 workers automatically.
+
     PYTHONPATH=src python examples/fault_tolerance_demo.py
     CHAOS_SEED=99 PYTHONPATH=src python examples/fault_tolerance_demo.py
 
@@ -26,6 +33,7 @@ import time
 from repro.configs import get_config
 from repro.core import (
     EXIT_SPECULATION_LOST,
+    ApplicationMaster,
     EventLog,
     FailureClass,
     FaultInjector,
@@ -35,7 +43,9 @@ from repro.core import (
     JobHistoryServer,
     MetricsAnalyzer,
     NodeHealthTracker,
+    RetryPolicy,
     SpeculationPolicy,
+    TaskDiagnostics,
     TonYClient,
     YarnLikeBackend,
     job_spec_from_props,
@@ -103,6 +113,97 @@ def speculation_act() -> None:
     print("speculation timeline:",
           [e.kind for e in events.failure_timeline()])
     print("OK (act 2)")
+
+
+def elastic_act() -> None:
+    """Act 3: blacklist-forced shrink, then regrow after parole."""
+    clock = [0.0]
+    events = EventLog()
+    health = NodeHealthTracker(threshold=1, parole_s=5.0,
+                               clock=lambda: clock[0], events=events)
+    # a kill on attempt 1 forces the retry that gets to regrow
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.KILL_TASK, task="worker:0", attempt=1, at_step=3))
+    # 4 one-slot GPU nodes; one strike blacklists gpu-node-0 -> 3 slots left
+    rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=0, gpus_per_node=1,
+                      memory_mb=2048, vcores=4, event_log=events,
+                      chaos=FaultInjector(plan, events=events), health=health)
+    health.record_failure("gpu-node-0", TaskDiagnostics(
+        task_id="worker:0", exit_status=137,
+        classification=FailureClass.INFRA, message="flaky GPU (pre-struck)"))
+
+    job = job_spec_from_props({
+        "tony.application.name": "elastic-demo",
+        "tony.application.max-attempts": "3",
+        "tony.worker.instances": "4",
+        "tony.worker.min-instances": "2",
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+
+    def gang_program(env, ctx):
+        tid = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not ctx.rendezvous(timeout=30, exec_id=tid, attempt=attempt):
+            return 3
+        if tid == "worker:0":
+            try:
+                for step in range(int(ctx.shared.get("resume_step", 0)), 8):
+                    if ctx.cancel.is_set():
+                        return 143
+                    ctx.step(tid, attempt, step)
+                    time.sleep(0.005)
+                    if (step + 1) % 2 == 0:
+                        ctx.shared["ckpt_step"] = step + 1
+            finally:
+                ctx.shared["done"] = True
+        else:
+            while not ctx.cancel.is_set() and not ctx.shared.get("done"):
+                time.sleep(0.002)
+        ctx.rendezvous(timeout=5, exec_id=tid, attempt=attempt)
+        return 0
+
+    app_id = rm.submit_application(job.name, job.queue)
+    am = ApplicationMaster(
+        rm, app_id, job, gang_program,
+        # the retry backoff "sleeps" past the bad node's parole deadline
+        retry_policy=RetryPolicy(max_attempts=3).with_clock(
+            lambda s: clock.__setitem__(0, clock[0] + 10.0)))
+    am.NEGOTIATION_TIMEOUT_S = 0.4
+    result = am.run()
+
+    print(f"\n=== Act 3: elastic shrink and regrow (seed={CHAOS_SEED}) ===")
+    shrink = events.of_kind("gang_resized")[0].payload
+    print(f"negotiation shortfall: worker {shrink['from_count']} -> "
+          f"{shrink['to_count']} (floor {shrink['floor']})")
+    assert result.succeeded and len(result.attempts) == 2
+    assert result.attempts[0].degraded and not result.attempts[1].degraded
+    assert result.resized_attempts == {1: {"worker": 3}}
+    print("attempt 1 launched degraded:", result.attempts[0].task_counts,
+          "of", result.attempts[0].target_counts)
+    assert events.count("attempt_degraded") == 1
+    assert events.count("node_paroled") == 1
+    regrow = events.of_kind("gang_regrown")[0].payload
+    print(f"after parole, attempt 2 regrew: world {regrow['from_world']} -> "
+          f"{regrow['world_size']}")
+    assert result.attempts[1].task_counts == {"worker": 4}
+    # checkpoint recovery rode along: attempt 2 resumed, not cold-started
+    assert result.attempts[1].resume_step == 2
+    assert not rm.live_containers() and rm.invariants_ok()
+
+    history = JobHistoryServer()
+    history.record(job, result)
+    summary = history.summary(result.app_id)
+    assert summary["resized_attempts"] == {1: {"worker": 3}}
+    advice = [s.message for s in MetricsAnalyzer().analyze(job, result)
+              if s.kind == "elastic_degraded"]
+    print("analyzer advice:", advice[0])
+    print("elastic timeline kinds:",
+          [e.kind for e in events.failure_timeline()
+           if e.kind in ("gang_resized", "attempt_degraded", "gang_regrown",
+                         "node_paroled", "partial_allocation")])
+    print("OK (act 3)")
 
 
 def main() -> None:
@@ -182,6 +283,7 @@ def main() -> None:
     print("OK (act 1)")
 
     speculation_act()
+    elastic_act()
 
 
 if __name__ == "__main__":

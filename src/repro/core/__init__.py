@@ -9,6 +9,7 @@ from repro.core.chaos import (  # noqa: F401
     NO_CHAOS,
     ChaosKill,
     ChaosOOM,
+    ChaosPartition,
     FaultInjector,
     FaultKind,
     FaultPlan,
@@ -20,9 +21,15 @@ from repro.core.client import (  # noqa: F401
     YarnLikeBackend,
     format_failure_report,
 )
-from repro.core.cluster_spec import build_cluster_spec, task_env  # noqa: F401
+from repro.core.cluster_spec import (  # noqa: F401
+    build_cluster_spec,
+    spec_task_counts,
+    spec_world_size,
+    task_env,
+)
 from repro.core.config import job_spec_from_props, parse_tony_xml, to_tony_xml  # noqa: F401
 from repro.core.events import (  # noqa: F401
+    ELASTIC_EVENT_KINDS,
     FAILURE_EVENT_KINDS,
     RECOVERY_EVENT_KINDS,
     SPECULATION_EVENT_KINDS,

@@ -18,6 +18,7 @@ from repro.core.cluster_spec import TaskAddress, build_cluster_spec
 from repro.core.events import EventLog
 from repro.core.failures import (
     EXIT_PREEMPTED,
+    FailureClass,
     RetryPolicy,
     TaskDiagnostics,
     diagnose_allocation_failure,
@@ -72,6 +73,29 @@ class AttemptReport:
     # backup copy that was launched
     stragglers: list[str] = field(default_factory=list)
     speculation: dict[str, str] = field(default_factory=dict)
+    # elastic gang resize: task_type -> members this attempt LAUNCHED with
+    # vs. the configured target, plus task ids shed mid-attempt after INFRA
+    # losses above the floor (the gang kept running without them)
+    task_counts: dict[str, int] = field(default_factory=dict)
+    target_counts: dict[str, int] = field(default_factory=dict)
+    shed_tasks: list[str] = field(default_factory=list)
+
+    @property
+    def degraded(self) -> bool:
+        """True when this attempt ran below the configured gang at any point
+        (launched short and/or shed members mid-attempt)."""
+        return bool(self.shed_tasks) or any(
+            self.task_counts.get(t, n) < n
+            for t, n in self.target_counts.items())
+
+    def final_counts(self) -> dict[str, int]:
+        """Per-task-type membership at the END of the attempt (launch counts
+        minus mid-attempt sheds)."""
+        out = dict(self.task_counts)
+        for tid in self.shed_tasks:
+            ttype = tid.split(":")[0]
+            out[ttype] = max(0, out.get(ttype, 0) - 1)
+        return out
 
 
 @dataclass
@@ -103,6 +127,13 @@ class JobResult:
         every speculative backup launched across attempts."""
         return {f"a{r.attempt}/{t}": o for r in self.attempts
                 for t, o in r.speculation.items()}
+
+    @property
+    def resized_attempts(self) -> dict[int, dict[str, int]]:
+        """attempt number -> final per-task-type membership, for every
+        attempt that ran degraded (elastic gang resize)."""
+        return {r.attempt: r.final_counts() for r in self.attempts
+                if r.degraded}
 
     def failure_summary(self) -> list[str]:
         """Human-readable one-liner per attributed failure, in attempt order."""
@@ -149,7 +180,14 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self._exit_diagnostics: dict[str, TaskDiagnostics] = {}
         self._stale_tasks: dict[str, TaskDiagnostics] = {}
         self._all_registered = threading.Event()
-        self._world_size = sum(t.instances for t in self.job.tasks.values())
+        # configured gang width; each attempt's *actual* width may be
+        # smaller under elastic resize (set per attempt in _expected_world)
+        self._target_world = sum(t.instances for t in self.job.tasks.values())
+        self._expected_world = self._target_world
+        # previous attempt's launch width + degraded flag, to emit
+        # gang_regrown when a later attempt recovers capacity
+        self._prev_world: int | None = None
+        self._prev_degraded = False
 
     # ------------------------------------------------------------------
     # Executor-facing protocol
@@ -162,7 +200,7 @@ class ApplicationMaster(ApplicationMasterProtocol):
             if ui_port is not None:
                 self.ui_url = f"http://{addr.host}:{ui_port}"
                 self.events.emit("am", "ui_registered", url=self.ui_url)
-            done = len(self._registrations) == self._world_size
+            done = len(self._registrations) == self._expected_world
         self.events.emit("am", "task_registered", task=executor.task_id,
                          endpoint=addr.endpoint)
         if done:
@@ -205,7 +243,8 @@ class ApplicationMaster(ApplicationMasterProtocol):
                 return JobResult(self.app_id, "SUCCEEDED", attempts,
                                  self.ui_url, self.task_logs, self.metrics,
                                  diagnostics,
-                                 blacklisted_nodes=self.rm.health.blacklisted())
+                                 blacklisted_nodes=self.rm.health.blacklisted(
+                                     scope=self.job.queue))
             self.events.emit("am", "attempt_failed", attempt=attempt,
                              failed=report.failed_tasks)
             classes = {d.classification for d in report.diagnostics.values()}
@@ -232,21 +271,36 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self.rm.set_app_state(self.app_id, "FAILED")
         return JobResult(self.app_id, "FAILED", attempts, self.ui_url,
                          self.task_logs, self.metrics, diagnostics,
-                         blacklisted_nodes=self.rm.health.blacklisted())
+                         blacklisted_nodes=self.rm.health.blacklisted(
+                             scope=self.job.queue))
 
     # ------------------------------------------------------------------
     NEGOTIATION_TIMEOUT_S = 5.0
     NEGOTIATION_BACKOFF_S = 0.05
+    # once this fraction of the negotiation window has burned without the
+    # full gang fitting, an elastic job downsizes toward its floors instead
+    # of waiting out the rest of the window and dying
+    ELASTIC_SHRINK_FRACTION = 0.5
 
-    def _negotiate_containers(self) -> dict[str, list[Container]]:
+    def _negotiate_containers(self, attempt: int = 0) -> dict[str, list[Container]]:
         """Heterogeneous resource requests: e.g. GPU containers for workers,
         CPU-only for parameter servers (paper §2.2).
 
         Gang semantics with backoff: under contention the AM keeps asking
         until the whole gang fits or the negotiation window expires — a
         queued job waits for resources instead of burning an attempt
-        (the paper's 'resource contention' motivation)."""
+        (the paper's 'resource contention' motivation).
+
+        Elastic jobs (any task with min_instances < instances) degrade
+        instead of dying: past ELASTIC_SHRINK_FRACTION of the window the AM
+        retries with ``allocate_up_to`` down to each task's floor, emitting
+        ``gang_resized`` per shrunk type. Every attempt asks for the FULL
+        gang first, so a later attempt regrows automatically once capacity
+        returns (e.g. after node parole)."""
         deadline = time.monotonic() + self.NEGOTIATION_TIMEOUT_S
+        shrink_at = (time.monotonic()
+                     + self.NEGOTIATION_TIMEOUT_S * self.ELASTIC_SHRINK_FRACTION)
+        elastic = any(t.elastic for t in self.job.tasks.values())
         waited = False
         while True:
             allocated: dict[str, list[Container]] = {}
@@ -265,6 +319,10 @@ class ApplicationMaster(ApplicationMasterProtocol):
                 for cs in allocated.values():
                     for c in cs:
                         self.rm.release(c.container_id)
+                if elastic and time.monotonic() >= shrink_at:
+                    degraded = self._negotiate_degraded(attempt)
+                    if degraded is not None:
+                        return degraded
                 if time.monotonic() >= deadline:
                     raise
                 if not waited:
@@ -279,6 +337,40 @@ class ApplicationMaster(ApplicationMasterProtocol):
                         count=tspec.instances)
                 time.sleep(self.NEGOTIATION_BACKOFF_S)
 
+    def _negotiate_degraded(self, attempt: int) -> dict[str, list[Container]] | None:
+        """One best-effort pass: rigid tasks still demand their full width,
+        elastic tasks accept anything down to their floor. Returns None
+        (releasing everything) when even the floors don't fit — the caller
+        keeps waiting out the negotiation window."""
+        allocated: dict[str, list[Container]] = {}
+        try:
+            for task_type, tspec in sorted(self.job.tasks.items()):
+                req = ContainerRequest(tspec.resource, tspec.node_label)
+                if tspec.elastic:
+                    allocated[task_type] = self.rm.allocate_up_to(
+                        self.app_id, req, tspec.instances,
+                        minimum=tspec.floor)
+                else:
+                    allocated[task_type] = self.rm.allocate_many(
+                        self.app_id, req, tspec.instances)
+        except AllocationError:
+            for cs in allocated.values():
+                for c in cs:
+                    self.rm.release(c.container_id)
+            return None
+        for task_type, cs in sorted(allocated.items()):
+            tspec = self.job.tasks[task_type]
+            if len(cs) < tspec.instances:
+                self.events.emit("am", "gang_resized", attempt=attempt,
+                                 task_type=task_type,
+                                 reason="allocation_shortfall",
+                                 from_count=tspec.instances,
+                                 to_count=len(cs), floor=tspec.floor)
+            self.events.emit("am", "containers_negotiated",
+                             task_type=task_type, count=len(cs),
+                             gpus=tspec.resource.gpus)
+        return allocated
+
     def _run_attempt(self, attempt: int,
                      resume_step: int | None = None) -> AttemptReport:
         t0 = time.monotonic()
@@ -291,7 +383,7 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self._all_registered.clear()
 
         try:
-            containers = self._negotiate_containers()
+            containers = self._negotiate_containers(attempt)
         except AllocationError as e:
             self.events.emit("am", "allocation_failed", error=str(e))
             diag = diagnose_allocation_failure(str(e))
@@ -304,9 +396,33 @@ class ApplicationMaster(ApplicationMasterProtocol):
                                  diagnostics={"__allocation__": diag},
                                  resume_step=resume_step)
 
-        ctx = JobContext(world_size=self._world_size, workdir=self.workdir,
+        # elastic resize bookkeeping: the attempt's ACTUAL gang vs. target.
+        # _expected_world gates the registration barrier, so it must be set
+        # before any executor starts.
+        counts = {t: len(cs) for t, cs in containers.items()}
+        targets = {t: s.instances for t, s in self.job.tasks.items()}
+        world = sum(counts.values())
+        with self._lock:
+            self._expected_world = world
+        if world < self._target_world:
+            self.events.emit("am", "attempt_degraded", attempt=attempt,
+                             world_size=world, target_world=self._target_world,
+                             task_counts=dict(counts))
+        elif self._prev_degraded and self._prev_world is not None \
+                and world > self._prev_world:
+            self.events.emit("am", "gang_regrown", attempt=attempt,
+                             world_size=world, from_world=self._prev_world,
+                             task_counts=dict(counts))
+        self._prev_world = world
+        self._prev_degraded = world < self._target_world
+
+        ctx = JobContext(world_size=world, workdir=self.workdir,
                          chaos=self.chaos)
         ctx.shared["attempt"] = attempt
+        ctx.shared["world_size"] = world
+        ctx.shared["target_world"] = self._target_world
+        ctx.shared["task_counts"] = dict(counts)
+        ctx.shared["target_counts"] = dict(targets)
         if resume_step is not None:
             # the relaunched program restores from this checkpoint instead
             # of reinitializing (checkpoint/checkpointer.py is its side of
@@ -348,6 +464,13 @@ class ApplicationMaster(ApplicationMasterProtocol):
         forgiven: set[str] = set()   # exec ids whose nonzero exit is benign
         stragglers: list[str] = []
         exec_by_id = {ex.task_id: ex for ex in executors}
+        # elastic mid-attempt shed: INFRA-lost members of an elastic task
+        # type, above its floor and not the chief, leave the gang instead of
+        # tearing the attempt down
+        shed: set[str] = set()
+        shed_diags: dict[str, TaskDiagnostics] = {}
+        live_counts = dict(counts)
+        chief_id = f"{worker_like}:0"
         while True:
             with self._lock:
                 exits = dict(self._exits)
@@ -413,11 +536,53 @@ class ApplicationMaster(ApplicationMasterProtocol):
                         spec_copies[tid] = copy
                         tracker.note_launched()
 
+            # elastic shed: an INFRA death of a non-chief member of an
+            # elastic task type, while the type is still above its floor,
+            # removes the task from the gang (barrier shrinks, node is
+            # charged, container released) and the attempt continues —
+            # degrade instead of die. Chief losses and TRANSIENT/FATAL_USER
+            # exits still tear the attempt down.
+            for xid, s in exits.items():
+                if s == 0 or xid in forgiven or xid in shed \
+                        or is_speculative_id(xid) or xid in spec_copies:
+                    continue
+                tspec = self.job.tasks.get(xid.split(":")[0])
+                if tspec is None or not tspec.elastic or xid == chief_id:
+                    continue
+                if live_counts.get(tspec.task_type, 0) - 1 < tspec.floor:
+                    continue
+                diag = (self._exit_diagnostics.get(xid)
+                        or diagnose_exit(xid, s))
+                if diag.classification is not FailureClass.INFRA:
+                    continue
+                shed.add(xid)
+                shed_diags[xid] = diag
+                live_counts[tspec.task_type] -= 1
+                self.events.emit("am", "task_failed", attempt=attempt,
+                                 task=xid,
+                                 classification=diag.classification.value,
+                                 reason=diag.describe())
+                self.events.emit("am", "gang_resized", attempt=attempt,
+                                 task_type=tspec.task_type,
+                                 reason="infra_loss", shed_task=xid,
+                                 from_count=live_counts[tspec.task_type] + 1,
+                                 to_count=live_counts[tspec.task_type],
+                                 floor=tspec.floor)
+                ex = exec_by_id.get(xid)
+                if ex is not None:
+                    self.rm.report_node_failure(ex.container.node_id, diag,
+                                                queue=self.job.queue)
+                    self.rm.release(ex.container.container_id,
+                                    ContainerState.FAILED, exit_status=s)
+                ctx.shrink_world()
+
             # a primary's nonzero exit is excused when its backup won (or is
-            # still racing); a copy's exit never tears the gang down
+            # still racing); a copy's exit never tears the gang down — and a
+            # shed elastic member's exit is already accounted for
             real_failed = False
             for xid, s in exits.items():
-                if s == 0 or xid in forgiven or is_speculative_id(xid):
+                if s == 0 or xid in forgiven or xid in shed \
+                        or is_speculative_id(xid):
                     continue
                 copy = spec_copies.get(xid)
                 if copy is not None:
@@ -468,15 +633,18 @@ class ApplicationMaster(ApplicationMasterProtocol):
         # Speculation carve-outs: a primary whose backup won is not failed,
         # and a copy's own exit never makes this list (its failure is the
         # race outcome, not the attempt's).
+        # A shed elastic member's death was absorbed mid-attempt (gang
+        # shrank instead of dying), so it never fails the attempt here.
         failed = sorted(set(
             [tid for tid, s in exits.items()
              if s != 0 and tid not in won and tid not in forgiven
-             and not is_speculative_id(tid)]
+             and tid not in shed and not is_speculative_id(tid)]
             + [tid for tid in self._last_heartbeat
                if tid not in exits and not is_speculative_id(tid)
                and tid not in won]
             + [tid for tid in self._stale_tasks
-               if not is_speculative_id(tid) and tid not in won]))
+               if not is_speculative_id(tid) and tid not in won
+               and tid not in shed]))
 
         # attribute every failure: a child exception beats a heartbeat
         # timeout beats a bare exit code
@@ -494,10 +662,15 @@ class ApplicationMaster(ApplicationMasterProtocol):
             # storms); speculation losers never reach here, so a slow-but-
             # alive node is never struck for losing a race
             if tid in node_of:
-                self.rm.report_node_failure(node_of[tid], diag)
+                self.rm.report_node_failure(node_of[tid], diag,
+                                            queue=self.job.queue)
         if not failed:
-            for node in set(node_of.values()):
-                self.rm.report_node_success(node)
+            # a clean attempt wipes strikes — except on nodes that hosted a
+            # shed member: their INFRA charge must survive the gang's
+            # success, or a flaky host never accumulates toward blacklist
+            shed_nodes = {node_of[t] for t in shed if t in node_of}
+            for node in set(node_of.values()) - shed_nodes:
+                self.rm.report_node_success(node, queue=self.job.queue)
 
         st = ContainerState.COMPLETED if not failed else ContainerState.FAILED
         for clist in containers.values():
@@ -510,6 +683,11 @@ class ApplicationMaster(ApplicationMasterProtocol):
         nodes_report.update({c.exec_id: c.container.node_id
                              for c in spec_copies.values()})
 
+        # shed members' attributed failures ride along in the report (they
+        # didn't fail the attempt, but post-mortems must still see them)
+        for tid, diag in shed_diags.items():
+            diagnostics.setdefault(tid, diag)
+
         # the chief publishes each completed checkpoint into the shared dict;
         # whatever survived this attempt seeds the next one's resume_step
         ckpt_step = ctx.shared.get("ckpt_step")
@@ -521,7 +699,10 @@ class ApplicationMaster(ApplicationMasterProtocol):
                              nodes=nodes_report,
                              stragglers=stragglers,
                              speculation={tid: c.outcome
-                                          for tid, c in spec_copies.items()})
+                                          for tid, c in spec_copies.items()},
+                             task_counts=counts,
+                             target_counts=targets,
+                             shed_tasks=sorted(shed))
 
     def _launch_speculative(self, primary: TaskExecutor, cluster_spec: dict,
                             ctx: JobContext,

@@ -40,6 +40,7 @@ class FaultKind(Enum):
     FAIL_ALLOCATION = "fail_allocation"  # RM.allocate raises
     PREEMPT = "preempt"                 # container reclaimed mid-attempt
     SLOW_STEP = "slow_step"             # delay each step in a range (straggler)
+    PARTITION = "partition"             # pair-wise network partition window
 
     def __str__(self) -> str:
         return self.value
@@ -53,6 +54,13 @@ class ChaosOOM(RuntimeError):
     """Injected OOM. The message mimics XLA's RESOURCE_EXHAUSTED so the
     failure-classification path (core/failures.py) detects it the same way
     it would a real allocator failure."""
+
+
+class ChaosPartition(RuntimeError):
+    """Injected network partition observed from inside a collective: the
+    task's peers became unreachable mid-step. Classified TRANSIENT (a
+    partition is the network's fault, not the node's — it must never put a
+    host on the blacklist)."""
 
 
 #: The message format XLA emits when a device allocation fails; the chaos
@@ -81,6 +89,15 @@ class FaultSpec:
     run under a ``#<copy>``-suffixed id (``worker:1#1``), so an exact task
     pattern slows only the original while a type-wide ``worker:*`` pattern
     slows backups too — target ``worker:1#1`` explicitly to slow a backup.
+
+    PARTITION cuts the network between the ``src`` and ``dst`` task-id
+    patterns (``task`` is ignored): while the window is open, both endpoints
+    stop heartbeating and block in rendezvous. Time-gated specs
+    (``after_s``/``duration_s`` from task start) model a transient fabric
+    outage the gang can ride out; step-gated specs (``at_step`` set,
+    optionally ``until_step``) instead raise ``ChaosPartition`` from the
+    ``src`` endpoint's training loop — a collective that noticed its peer
+    vanished — which is deterministic per step and classified TRANSIENT.
     """
     kind: FaultKind
     task: str = "worker:0"
@@ -92,13 +109,27 @@ class FaultSpec:
     count: int = 1
     until_step: int | None = None
     delay_s: float = 0.0
+    src: str = ""                      # PARTITION endpoint patterns
+    dst: str = ""
+
+    @staticmethod
+    def _match(pattern: str, task_id: str) -> bool:
+        if pattern == "*":
+            return True
+        if pattern.endswith(":*"):
+            return task_id.split(":")[0] == pattern[:-2]
+        return task_id == pattern
 
     def matches_task(self, task_id: str) -> bool:
-        if self.task == "*":
-            return True
-        if self.task.endswith(":*"):
-            return task_id.split(":")[0] == self.task[:-2]
-        return task_id == self.task
+        return self._match(self.task, task_id)
+
+    def matches_src(self, task_id: str) -> bool:
+        return self._match(self.src or self.task, task_id)
+
+    def matches_endpoint(self, task_id: str) -> bool:
+        """True when ``task_id`` is on either side of the partition."""
+        return self.matches_src(task_id) or (
+            bool(self.dst) and self._match(self.dst, task_id))
 
     def matches_attempt(self, attempt: int) -> bool:
         return self.attempt == 0 or self.attempt == attempt
@@ -149,6 +180,7 @@ class FaultInjector:
         self._task_start: dict[tuple[str, int], float] = {}
         self._hb_dropping: set[tuple[int, str, int]] = set()
         self._slowing: set[tuple[int, str, int]] = set()
+        self._partitioning: set[tuple[int, str, int]] = set()
         self._alloc_calls = 0
 
     @property
@@ -224,6 +256,37 @@ class FaultInjector:
                     return True
         return False
 
+    def partition_active(self, task_id: str | None, attempt: int) -> bool:
+        """True while ``task_id`` sits on either side of an open time-gated
+        PARTITION window: its heartbeats are dropped and its rendezvous
+        blocks (JobContext.rendezvous polls this). Windows run on task-start
+        time (``after_s``..``after_s + duration_s``); a task probed before
+        ``task_started`` registered it counts as elapsed 0.0. Step-gated
+        partition specs (``at_step`` set) are handled by ``check_step``."""
+        if not self.enabled or task_id is None:
+            return False
+        with self._lock:
+            t0 = self._task_start.get((task_id, attempt))
+            elapsed = 0.0 if t0 is None else self.clock() - t0
+            for idx, spec in self._specs(FaultKind.PARTITION):
+                if spec.at_step is not None:
+                    continue
+                if not (spec.matches_endpoint(task_id)
+                        and spec.matches_attempt(attempt)):
+                    continue
+                in_window = spec.after_s <= elapsed < spec.after_s + spec.duration_s
+                key = (idx, task_id, attempt)
+                if in_window and key not in self._partitioning:
+                    if not self._eligible(idx, spec):
+                        continue
+                    self._partitioning.add(key)
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               src=spec.src or spec.task, dst=spec.dst,
+                               duration_s=spec.duration_s)
+                if in_window and key in self._partitioning:
+                    return True
+        return False
+
     def should_preempt(self, task_id: str, attempt: int) -> bool:
         """True once this task's container should be reclaimed mid-attempt
         (capacity-scheduler preemption without a competing job)."""
@@ -267,6 +330,23 @@ class FaultInjector:
                     self._fire(idx, spec, task=task_id, attempt=attempt,
                                step=step, oom=True)
                     raise ChaosOOM(OOM_MESSAGE.format(nbytes=17_179_869_184))
+            for idx, spec in self._specs(FaultKind.PARTITION):
+                # step-gated partitions raise from the src side only, so a
+                # single deterministic task observes the fault per step
+                if spec.at_step is None:
+                    continue
+                if not (spec.matches_src(task_id)
+                        and spec.matches_attempt(attempt)):
+                    continue
+                hi = spec.until_step if spec.until_step is not None else spec.at_step
+                if (spec.at_step <= step <= hi and self._eligible(idx, spec)):
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               step=step, src=spec.src or spec.task,
+                               dst=spec.dst)
+                    raise ChaosPartition(
+                        f"chaos: network partition {spec.src or spec.task} "
+                        f"<-> {spec.dst or '*'} at attempt={attempt} "
+                        f"step={step} (seed={self.plan.seed})")
             for idx, spec in self._specs(FaultKind.SLOW_STEP):
                 if not (spec.matches_task(task_id)
                         and spec.matches_attempt(attempt)):

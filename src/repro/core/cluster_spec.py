@@ -29,6 +29,18 @@ def build_cluster_spec(addresses: list[TaskAddress]) -> dict[str, list[str]]:
     }
 
 
+def spec_world_size(cluster_spec: dict[str, list[str]]) -> int:
+    """The *actual* world size of a broadcast spec. Under elastic resize this
+    can be smaller than the job's configured instance counts — programs must
+    rendezvous on and shard for this number, never the requested one."""
+    return sum(len(v) for v in cluster_spec.values())
+
+
+def spec_task_counts(cluster_spec: dict[str, list[str]]) -> dict[str, int]:
+    """Actual per-task-type membership of a broadcast spec."""
+    return {t: len(v) for t, v in cluster_spec.items()}
+
+
 def task_env(cluster_spec: dict[str, list[str]], task_type: str, index: int,
              job_args: dict[str, str]) -> dict[str, str]:
     """Environment a TaskExecutor materializes before spawning the ML child
@@ -41,7 +53,7 @@ def task_env(cluster_spec: dict[str, list[str]], task_type: str, index: int,
         }, sort_keys=True),
         "TASK_TYPE": task_type,
         "TASK_INDEX": str(index),
-        "WORLD_SIZE": str(sum(len(v) for v in cluster_spec.values())),
+        "WORLD_SIZE": str(spec_world_size(cluster_spec)),
     }
     for k, v in job_args.items():
         env[f"JOB_ARG_{k.upper()}"] = str(v)

@@ -68,8 +68,19 @@ def job_spec_from_props(props: dict[str, str]) -> JobSpec:
             vcores=int(fields.get("vcores", _DEFAULT_RESOURCE.vcores)),
             gpus=int(fields.get("gpus", "0")),
         )
+        # elastic gang floor: tony.<task>.min-instances lets the AM run the
+        # task type degraded, down to this many members, instead of failing
+        # when the cluster can't fit the full gang
+        min_instances: int | None = None
+        if "min-instances" in fields:
+            min_instances = int(fields["min-instances"])
+            if not 1 <= min_instances <= instances:
+                raise ValueError(
+                    f"tony.{task_type}.min-instances={min_instances} must be "
+                    f"in [1, instances={instances}]")
         tasks[task_type] = TaskSpec(task_type, instances, res,
-                                    fields.get("node-label") or None)
+                                    fields.get("node-label") or None,
+                                    min_instances=min_instances)
     if not tasks:
         raise ValueError("job config declares no task instances")
     return JobSpec(name=name, tasks=tasks, queue=queue, ml_program=ml_program,
@@ -100,6 +111,8 @@ def to_tony_xml(spec: JobSpec) -> str:
         add(f"tony.{t.task_type}.gpus", t.resource.gpus)
         if t.node_label:
             add(f"tony.{t.task_type}.node-label", t.node_label)
+        if t.min_instances is not None:
+            add(f"tony.{t.task_type}.min-instances", t.min_instances)
     for k, v in spec.args.items():
         add(f"tony.args.{k}", v)
     return ET.tostring(root, encoding="unicode")

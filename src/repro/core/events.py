@@ -49,6 +49,19 @@ SPECULATION_EVENT_KINDS = frozenset({
     "speculative_cancelled",
 })
 
+#: Elastic gang-resize event kinds (core/appmaster.py, core/rm.py):
+#:   partial_allocation — the RM granted fewer containers than asked but at
+#:                        least the caller's minimum (allocate_up_to)
+#:   gang_resized       — the AM shrank a task type below its configured
+#:                        width (reason: allocation_shortfall at negotiation
+#:                        time, or infra_loss for a mid-attempt shed)
+#:   attempt_degraded   — an attempt launched with world_size < target_world
+#:   gang_regrown       — a later attempt recovered capacity and launched
+#:                        wider than the previous (degraded) one
+ELASTIC_EVENT_KINDS = frozenset({
+    "partial_allocation", "gang_resized", "attempt_degraded", "gang_regrown",
+})
+
 
 class EventLog:
     def __init__(self):
@@ -72,10 +85,11 @@ class EventLog:
         return len(self.of_kind(kind))
 
     def failure_timeline(self) -> list[Event]:
-        """All failure-diagnostics + recovery + speculation events in order —
-        the 'why did my job fail (and how did it come back)' trail the
-        history server renders."""
+        """All failure-diagnostics + recovery + speculation + elastic-resize
+        events in order — the 'why did my job fail (and how did it come
+        back)' trail the history server renders."""
         return [e for e in self.all()
                 if e.kind in FAILURE_EVENT_KINDS
                 or e.kind in RECOVERY_EVENT_KINDS
-                or e.kind in SPECULATION_EVENT_KINDS]
+                or e.kind in SPECULATION_EVENT_KINDS
+                or e.kind in ELASTIC_EVENT_KINDS]

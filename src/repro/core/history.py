@@ -56,6 +56,10 @@ class JobHistoryServer:
             "stragglers": sorted({t for r in e.result.attempts
                                   for t in r.stragglers}),
             "speculation": dict(e.result.speculation),
+            # elastic gang resize: attempt -> final per-task-type membership
+            # for every attempt that ran below the configured gang
+            "resized_attempts": {a: dict(c) for a, c
+                                 in e.result.resized_attempts.items()},
         }
 
     @staticmethod
@@ -111,8 +115,26 @@ class MetricsAnalyzer:
                 f"job needed {len(result.attempts)} attempts; check task logs "
                 f"for transient failures"))
         out.extend(self._straggler_suggestions(result))
+        out.extend(self._elastic_suggestions(result))
         out.extend(self._failure_suggestions(result))
         return out
+
+    @staticmethod
+    def _elastic_suggestions(result: JobResult) -> list[Suggestion]:
+        """Elastic-resize advice: degraded attempts mean the cluster could
+        not (or stopped being able to) host the configured gang."""
+        resized = result.resized_attempts
+        if not resized:
+            return []
+        detail = "; ".join(
+            f"attempt {a}: " + ", ".join(f"{t}={n}" for t, n in sorted(c.items()))
+            for a, c in sorted(resized.items()))
+        return [Suggestion(
+            "*", "elastic_degraded",
+            f"{len(resized)} attempt(s) ran below the configured gang "
+            f"({detail}); the job survived thanks to min-instances, but "
+            "check node health / queue contention — or lower "
+            "tony.<task>.instances if degraded throughput is the norm")]
 
     @staticmethod
     def _straggler_suggestions(result: JobResult) -> list[Suggestion]:

@@ -96,6 +96,20 @@ class TaskSpec:
     instances: int
     resource: Resource
     node_label: str | None = None
+    # elastic gang floor (tony.<task>.min-instances): the AM may run this
+    # task type with as few as ``min_instances`` members when the cluster
+    # cannot fit the full gang (and shed members down to it after INFRA
+    # losses mid-attempt). None (default) = rigid: exactly ``instances``
+    # members or the attempt fails — elasticity is strictly opt-in.
+    min_instances: int | None = None
+
+    @property
+    def floor(self) -> int:
+        return self.instances if self.min_instances is None else self.min_instances
+
+    @property
+    def elastic(self) -> bool:
+        return self.floor < self.instances
 
 
 @dataclass

@@ -39,8 +39,14 @@ class AllocationError(RuntimeError):
     pass
 
 
+#: Blacklist scope used when no queue is given. It deliberately matches the
+#: default queue name, so single-queue clusters behave exactly as before
+#: scopes existed.
+DEFAULT_SCOPE = "default"
+
+
 class NodeHealthTracker:
-    """Blacklist nodes that keep producing INFRA failures.
+    """Blacklist nodes that keep producing INFRA failures, per queue scope.
 
     A flaky host (bad GPU, broken disk, memory pressure) fails every task
     scheduled onto it; without tracking, the RM re-allocates each retried
@@ -49,6 +55,12 @@ class NodeHealthTracker:
     node is excluded from placement, with timed parole (``parole_s``) so a
     recovered host rejoins — on parole it re-enters one strike from
     re-blacklisting rather than with a clean slate.
+
+    Strikes are charged per *scope* (the RM uses the charging app's queue):
+    a node that keeps OOM-killing queue A's heavyweight containers is not
+    evicted from queue B's placement — B's smaller tasks may run there
+    fine, and one tenant's workload must not poison another's capacity.
+    Parole is per-scope for the same reason.
 
     Only INFRA counts: FATAL_USER is the program's fault and TRANSIENT
     (teardown of innocent siblings, heartbeat blips, contention) would
@@ -63,54 +75,68 @@ class NodeHealthTracker:
         self.clock = clock
         self.events = events
         self._lock = threading.Lock()
-        self._failures: dict[str, int] = {}
-        self._parole_at: dict[str, float] = {}    # node -> parole deadline
+        self._failures: dict[tuple[str, str], int] = {}     # (scope, node)
+        self._parole_at: dict[tuple[str, str], float] = {}  # -> parole deadline
 
-    def record_failure(self, node_id: str, diag: TaskDiagnostics) -> bool:
-        """Count one attributed failure against ``node_id``. Returns True
-        when this failure tipped the node into the blacklist."""
+    def record_failure(self, node_id: str, diag: TaskDiagnostics,
+                       scope: str = DEFAULT_SCOPE) -> bool:
+        """Count one attributed failure against ``node_id`` under ``scope``.
+        Returns True when this failure tipped the node into the blacklist."""
         if diag.classification is not FailureClass.INFRA:
             return False
         with self._lock:
-            n = self._failures.get(node_id, 0) + 1
-            self._failures[node_id] = n
-            if n >= self.threshold and node_id not in self._parole_at:
-                self._parole_at[node_id] = self.clock() + self.parole_s
+            key = (scope, node_id)
+            n = self._failures.get(key, 0) + 1
+            self._failures[key] = n
+            if n >= self.threshold and key not in self._parole_at:
+                self._parole_at[key] = self.clock() + self.parole_s
                 if self.events is not None:
                     self.events.emit("rm", "node_blacklisted", node=node_id,
+                                     scope=scope,
                                      infra_failures=n, oom=diag.oom,
                                      parole_s=self.parole_s,
                                      reason=diag.describe())
                 return True
         return False
 
-    def record_success(self, node_id: str) -> None:
-        """A clean attempt on the node wipes its strike count."""
+    def record_success(self, node_id: str, scope: str = DEFAULT_SCOPE) -> None:
+        """A clean attempt on the node wipes its strike count in ``scope``."""
         with self._lock:
-            self._failures.pop(node_id, None)
+            self._failures.pop((scope, node_id), None)
 
-    def is_blacklisted(self, node_id: str) -> bool:
+    def is_blacklisted(self, node_id: str, scope: str = DEFAULT_SCOPE) -> bool:
         with self._lock:
-            deadline = self._parole_at.get(node_id)
+            key = (scope, node_id)
+            deadline = self._parole_at.get(key)
             if deadline is None:
                 return False
             if self.clock() >= deadline:
                 # parole: allow the node back, one strike from re-blacklist
-                del self._parole_at[node_id]
-                self._failures[node_id] = self.threshold - 1
+                del self._parole_at[key]
+                self._failures[key] = self.threshold - 1
                 if self.events is not None:
-                    self.events.emit("rm", "node_paroled", node=node_id)
+                    self.events.emit("rm", "node_paroled", node=node_id,
+                                     scope=scope)
                 return False
             return True
 
-    def blacklisted(self) -> list[str]:
-        return sorted(n for n in list(self._parole_at)
-                      if self.is_blacklisted(n))
+    def blacklisted(self, scope: str | None = None) -> list[str]:
+        """Node ids currently blacklisted — in ``scope``, or in any scope
+        when ``scope`` is None."""
+        return sorted({n for (s, n) in list(self._parole_at)
+                       if (scope is None or s == scope)
+                       and self.is_blacklisted(n, s)})
 
     def snapshot(self) -> dict:
+        # default-scope entries keep bare node-id keys (the common
+        # single-queue case); other scopes render as "node@scope"
+        def key(scope: str, node: str) -> str:
+            return node if scope == DEFAULT_SCOPE else f"{node}@{scope}"
         with self._lock:
-            return {"failures": dict(self._failures),
-                    "blacklisted": sorted(self._parole_at)}
+            return {"failures": {key(s, n): c
+                                 for (s, n), c in self._failures.items()},
+                    "blacklisted": sorted(key(s, n)
+                                          for (s, n) in self._parole_at)}
 
 
 _app_ids = itertools.count(1)
@@ -201,7 +227,7 @@ class ResourceManager:
                     continue
                 if request.node_label and request.node_label not in node.labels:
                     continue
-                if self.health.is_blacklisted(node.node_id):
+                if self.health.is_blacklisted(node.node_id, queue):
                     continue
                 if node.can_fit(request.resource):
                     node.used = node.used + request.resource
@@ -230,6 +256,31 @@ class ResourceManager:
             for c in out:
                 self.release(c.container_id)
             raise
+        return out
+
+    def allocate_up_to(self, app_id: str, request: ContainerRequest,
+                       count: int, minimum: int = 0) -> list[Container]:
+        """Best-effort gang ask: allocate up to ``count`` containers,
+        accepting a partial grant as long as at least ``minimum`` landed.
+
+        This is the elastic half of gang negotiation: the AM asks for the
+        full task-type width but tolerates a shortfall down to the task's
+        ``min_instances`` floor. Below the floor every partial container is
+        released (no leaks) and the AllocationError propagates, exactly like
+        ``allocate_many``.
+        """
+        out: list[Container] = []
+        try:
+            for _ in range(count):
+                out.append(self.allocate(app_id, request))
+        except AllocationError:
+            if len(out) < minimum:
+                for c in out:
+                    self.release(c.container_id)
+                raise
+            self.events.emit("rm", "partial_allocation", app_id=app_id,
+                             granted=len(out), requested=count,
+                             minimum=minimum)
         return out
 
     def release(self, container_id: str,
@@ -268,14 +319,16 @@ class ResourceManager:
             lim = self.queue_limit(queue)
             return not q.used.fits_in(lim)
 
-    def _gang_fits(self, request: ContainerRequest, count: int) -> bool:
+    def _gang_fits(self, request: ContainerRequest, count: int,
+                   queue: str = DEFAULT_SCOPE) -> bool:
         """Greedy bin check: could ``count`` copies of ``request`` be placed
-        on the currently-available node capacities?"""
+        on the currently-available node capacities, from ``queue``'s view of
+        the blacklist?"""
         avail = []
         for n in self.nodes.values():
             if request.node_label and request.node_label not in n.labels:
                 continue
-            if self.health.is_blacklisted(n.node_id):
+            if self.health.is_blacklisted(n.node_id, queue):
                 continue
             avail.append(n.available)
         placed = 0
@@ -300,7 +353,7 @@ class ResourceManager:
                        and self.queue_over_share(
                            self._container_queue[c.container_id])]
             for victim in victims:
-                if self._gang_fits(request, count):
+                if self._gang_fits(request, count, my_queue):
                     break
                 self.release(victim.container_id, ContainerState.PREEMPTED,
                              exit_status=137,
@@ -323,14 +376,16 @@ class ResourceManager:
     # Node health: the AM attributes task failures to the hosting node so
     # repeated INFRA trouble gets the node excluded from future placement.
 
-    def report_node_failure(self, node_id: str, diag: TaskDiagnostics) -> bool:
+    def report_node_failure(self, node_id: str, diag: TaskDiagnostics,
+                            queue: str = DEFAULT_SCOPE) -> bool:
         if node_id not in self.nodes:
             return False
-        return self.health.record_failure(node_id, diag)
+        return self.health.record_failure(node_id, diag, scope=queue)
 
-    def report_node_success(self, node_id: str) -> None:
+    def report_node_success(self, node_id: str,
+                            queue: str = DEFAULT_SCOPE) -> None:
         if node_id in self.nodes:
-            self.health.record_success(node_id)
+            self.health.record_success(node_id, scope=queue)
 
     # ------------------------------------------------------------------
     def live_containers(self) -> list[Container]:

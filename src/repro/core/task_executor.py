@@ -63,6 +63,17 @@ class CancellableBarrier:
                 self._cond.wait(0.05)
             return True
 
+    def reduce(self, n: int = 1) -> None:
+        """Shrink the party by ``n`` (elastic gang resize: a shed member will
+        never arrive). Releases current waiters if they now form a full
+        party."""
+        with self._cond:
+            self.n = max(1, self.n - n)
+            if self._count >= self.n:
+                self._count = 0
+                self._generation += 1
+                self._cond.notify_all()
+
 
 @dataclass
 class JobContext:
@@ -93,8 +104,26 @@ class JobContext:
         if self.chaos is None:
             self.chaos = NO_CHAOS
 
-    def rendezvous(self, timeout: float = 300.0) -> bool:
-        return self.barrier.wait(self.cancel, timeout)
+    def rendezvous(self, timeout: float = 300.0,
+                   exec_id: str | None = None, attempt: int = 0) -> bool:
+        """Gang barrier. When the caller identifies itself (``exec_id``),
+        an open chaos PARTITION window blocks it *before* it joins the
+        barrier — a partitioned task can't reach its peers — until the
+        window closes, cancel fires, or the timeout burns down."""
+        deadline = time.monotonic() + timeout
+        while self.chaos.partition_active(exec_id, attempt):
+            if self.cancel.is_set() or time.monotonic() > deadline:
+                return False
+            time.sleep(0.01)
+        remaining = max(0.0, deadline - time.monotonic())
+        return self.barrier.wait(self.cancel, remaining)
+
+    def shrink_world(self, n: int = 1) -> None:
+        """Elastic resize mid-attempt: an INFRA-lost member above the floor
+        was shed, so future barriers expect one fewer participant."""
+        self.world_size = max(1, self.world_size - n)
+        self.shared["world_size"] = self.world_size
+        self.barrier.reduce(n)
 
     def report_progress(self, exec_id: str, step: int) -> None:
         self.progress[exec_id] = step
@@ -216,7 +245,8 @@ class TaskExecutor:
             attempt = int(self.ctx.shared.get("attempt", 1))
             self.chaos.task_started(self.exec_id, attempt)
             while child_t.is_alive():
-                if self.chaos.drop_heartbeat(self.exec_id, attempt):
+                if self.chaos.drop_heartbeat(self.exec_id, attempt) or \
+                        self.chaos.partition_active(self.exec_id, attempt):
                     # chaos: simulated network partition — the AM sees a
                     # silent task and attributes a heartbeat timeout
                     pass

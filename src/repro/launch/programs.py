@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig
+from repro.core.cluster_spec import spec_task_counts
 from repro.core.task_executor import JobContext
 from repro.data import make_dataset
 from repro.distributed.steps import init_train_state, make_train_fn
@@ -66,7 +67,11 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
         speculative = env.get("SPECULATIVE") == "1"
         exec_id = task_id + "#1" if speculative else task_id
 
-        if not speculative and not ctx.rendezvous(timeout=60.0):
+        # identify ourselves to the barrier so a chaos PARTITION window
+        # blocks this endpoint's rendezvous (it can't reach its peers)
+        if not speculative and not ctx.rendezvous(timeout=60.0,
+                                                  exec_id=exec_id,
+                                                  attempt=attempt):
             return 3  # cancelled before the job formed
 
         worker_types = [t for t in ("worker", "chief") if t in spec]
@@ -96,13 +101,29 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
                 "peak_memory_mb": 64.0, "role": 0.0}
         if not speculative:
             ctx.shared["train_done"] = True
-            ctx.rendezvous(timeout=30.0)
+            ctx.rendezvous(timeout=30.0, exec_id=exec_id, attempt=attempt)
         return rc
 
     def _chief_train_loop(env, ctx: JobContext, attempt: int, exec_id: str) -> int:
         mesh = _local_mesh(strategy)
         t_start = time.monotonic()
-        data = make_dataset(data_kind, batch_size, seq_len, cfg.vocab_size,
+        # elastic resize: shard for the gang that ACTUALLY launched, not the
+        # one the config asked for. A degraded attempt scales the global
+        # batch down proportionally (rounded to a multiple of the mesh's
+        # data axis so sharding stays valid); a full-size attempt keeps the
+        # configured batch byte-for-byte.
+        spec = json.loads(env["CLUSTER_SPEC"])
+        counts = spec_task_counts(spec)
+        targets = ctx.shared.get("target_counts") or {}
+        my_type = env["TASK_TYPE"]
+        n_actual = counts.get(my_type, 1)
+        n_target = targets.get(my_type, n_actual)
+        global_batch = batch_size
+        if 0 < n_actual < n_target:
+            data_ax = int(mesh.shape["data"])
+            scaled = max(1, batch_size * n_actual // n_target)
+            global_batch = max(data_ax, (scaled // data_ax) * data_ax)
+        data = make_dataset(data_kind, global_batch, seq_len, cfg.vocab_size,
                             path=data_path, seed=data_seed)
         ckpt = Checkpointer(ckpt_dir)
         with set_mesh(mesh):
@@ -160,6 +181,8 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
                 "steps": float(steps),
                 "final_loss": losses[-1][1] if losses else float("nan"),
                 "train_seconds": time.monotonic() - t_start,
+                "world_size": float(sum(counts.values())),
+                "global_batch": float(global_batch),
             }
         return 0
 

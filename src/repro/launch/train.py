@@ -31,7 +31,8 @@ from repro.core import (
 from repro.launch.programs import make_train_program
 
 
-def build_job(name: str, workers: int, ps: int, gpus_per_worker: int = 1):
+def build_job(name: str, workers: int, ps: int, gpus_per_worker: int = 1,
+              min_workers: int = 0):
     props = {
         "tony.application.name": name,
         "tony.worker.instances": str(workers),
@@ -40,6 +41,9 @@ def build_job(name: str, workers: int, ps: int, gpus_per_worker: int = 1):
         "tony.worker.gpus": str(gpus_per_worker),
         "tony.worker.node-label": "gpu",
     }
+    if min_workers > 0:
+        # elastic gang: the AM may run degraded down to this many workers
+        props["tony.worker.min-instances"] = str(min_workers)
     if ps > 0:
         props.update({
             "tony.ps.instances": str(ps),
@@ -60,6 +64,9 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--min-workers", type=int, default=0,
+                    help="elastic gang floor (tony.worker.min-instances); "
+                         "0 = rigid: exactly --workers or the attempt fails")
     ap.add_argument("--ps", type=int, default=1)
     ap.add_argument("--strategy", default="fsdp_tp")
     ap.add_argument("--ckpt-dir", default="")
@@ -85,6 +92,21 @@ def main() -> None:
                        help="last slowed step (default: every step onward)")
     chaos.add_argument("--chaos-slow-delay", type=float, default=0.05,
                        help="extra seconds added to each slowed step")
+    chaos.add_argument("--chaos-partition-src", default=None, metavar="TASK",
+                       help="partition: one endpoint pattern (e.g. worker:0)")
+    chaos.add_argument("--chaos-partition-dst", default="*", metavar="TASK",
+                       help="partition: the other endpoint pattern")
+    chaos.add_argument("--chaos-partition-step", type=int, default=None,
+                       help="step-gated partition: first affected step "
+                            "(raises from the src side)")
+    chaos.add_argument("--chaos-partition-until", type=int, default=None,
+                       help="step-gated partition: last affected step "
+                            "(default: only --chaos-partition-step)")
+    chaos.add_argument("--chaos-partition-after", type=float, default=0.0,
+                       help="time-gated partition: seconds after task start")
+    chaos.add_argument("--chaos-partition-duration", type=float, default=0.0,
+                       help="time-gated partition: window length in seconds "
+                            "(heartbeats dropped, rendezvous blocked)")
     spec = ap.add_argument_group(
         "speculation", "straggler detection + backups (core/speculation.py)")
     spec.add_argument("--speculation", action="store_true",
@@ -116,6 +138,14 @@ def main() -> None:
                                   at_step=args.chaos_slow_step,
                                   until_step=args.chaos_slow_until,
                                   delay_s=args.chaos_slow_delay))
+    if args.chaos_partition_src:
+        plan = plan.add(FaultSpec(FaultKind.PARTITION,
+                                  src=args.chaos_partition_src,
+                                  dst=args.chaos_partition_dst,
+                                  at_step=args.chaos_partition_step,
+                                  until_step=args.chaos_partition_until,
+                                  after_s=args.chaos_partition_after,
+                                  duration_s=args.chaos_partition_duration))
 
     events = EventLog()
     rm = make_cluster(num_gpu_nodes=4, num_cpu_nodes=2, gpus_per_node=4,
@@ -129,7 +159,8 @@ def main() -> None:
         patience=args.speculation_patience,
         min_progress=args.speculation_min_progress)
     client = TonYClient(YarnLikeBackend(rm, speculation=speculation))
-    job = build_job(f"train-{cfg.name}", args.workers, args.ps)
+    job = build_job(f"train-{cfg.name}", args.workers, args.ps,
+                    min_workers=args.min_workers)
 
     steps_log = []
     prog = make_train_program(
@@ -152,6 +183,7 @@ def main() -> None:
         "failure_reasons": summary["failure_reasons"],
         "retry_advice": summary["retry_advice"],
         "resumed_attempts": summary["resumed_attempts"],
+        "resized_attempts": summary["resized_attempts"],
         "blacklisted_nodes": summary["blacklisted_nodes"],
         "stragglers": summary["stragglers"],
         "speculation": summary["speculation"],

@@ -20,7 +20,9 @@ from repro.core import (
     FaultKind,
     FaultPlan,
     FaultSpec,
+    NodeHealthTracker,
     RetryPolicy,
+    TaskDiagnostics,
     job_spec_from_props,
     make_cluster,
 )
@@ -127,6 +129,147 @@ def test_matrix_terminates_with_classified_outcome(label, spec):
     assert rm.invariants_ok(), f"{label}: RM invariants violated"
     # chaos actually fired (the grid never silently no-ops)
     assert ev.count("chaos_injected") >= 1, f"{label}: fault never fired"
+
+
+# ----------------------------------------------------------------------
+# elastic × fault cells: the same termination-with-attribution contract,
+# but the gang may legally *shrink* (min-instances) instead of dying —
+# degraded completions must still be leak-free and fully evented.
+
+ELASTIC_MATRIX = [
+    # blacklist-forced shrink: a pre-struck node leaves room for only 2 of 3
+    ("blacklist_shrink", None),
+    # mid-attempt INFRA loss above the floor -> shed, attempt continues
+    ("oom_shed", FaultSpec(FaultKind.OOM, task="worker:1", at_step=2)),
+    # time-gated partition during rendezvous -> gang forms after the window
+    ("partition_rendezvous", FaultSpec(FaultKind.PARTITION, src="worker:1",
+                                       dst="worker:0", attempt=1,
+                                       duration_s=0.3)),
+    # step-gated partition -> ChaosPartition, TRANSIENT retry
+    ("partition_step", FaultSpec(FaultKind.PARTITION, src="worker:0",
+                                 dst="worker:1", attempt=1, at_step=2)),
+    # allocation chaos mid-negotiation -> ride out or downsize, never leak
+    ("fail_alloc", FaultSpec(FaultKind.FAIL_ALLOCATION, after_allocs=1,
+                             count=2)),
+    # preemption of an elastic member mid-attempt
+    ("preempt_member", FaultSpec(FaultKind.PREEMPT, task="worker:1",
+                                 attempt=1, after_s=0.02)),
+]
+
+_PRESTRIKE = TaskDiagnostics(task_id="worker:0", exit_status=137,
+                             classification=FailureClass.INFRA,
+                             message="pre-struck for the elastic matrix")
+
+
+def _elastic_job(attempts=3):
+    return job_spec_from_props({
+        "tony.application.name": "elastic-matrix",
+        "tony.application.max-attempts": str(attempts),
+        "tony.worker.instances": "3",
+        "tony.worker.min-instances": "2",
+        "tony.worker.memory": "1024",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+
+
+def _gang_step_program(steps=6):
+    """Every member steps (chaos can target any task id): worker:0 drives,
+    the rest mirror its progress."""
+    def program(env, ctx):
+        task_id = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not ctx.rendezvous(timeout=10, exec_id=task_id, attempt=attempt):
+            return 3
+        if task_id == "worker:0":
+            start = int(ctx.shared.get("resume_step", 0))
+            try:
+                for step in range(start, steps):
+                    if ctx.cancel.is_set():
+                        return 143
+                    ctx.step(task_id, attempt, step)
+                    time.sleep(0.005)
+                    if (step + 1) % 2 == 0:
+                        ctx.shared["ckpt_step"] = step + 1
+            finally:
+                ctx.shared["done"] = True
+        else:
+            my_step = -1
+            while not ctx.cancel.is_set() and not ctx.shared.get("done"):
+                lead = ctx.progress.get("worker:0", -1)
+                if my_step < lead:
+                    my_step += 1
+                    ctx.step(task_id, attempt, my_step)
+                else:
+                    time.sleep(0.002)
+        ctx.rendezvous(timeout=5, exec_id=task_id, attempt=attempt)
+        return 0
+
+    return program
+
+
+def _run_elastic_cell(spec):
+    plan = FaultPlan(seed=CHAOS_SEED)
+    if spec is not None:
+        plan = plan.add(spec)
+    ev = EventLog()
+    health = NodeHealthTracker(threshold=1, parole_s=3600.0, events=ev)
+    rm = make_cluster(num_gpu_nodes=3, num_cpu_nodes=0, gpus_per_node=1,
+                      memory_mb=2048, vcores=4, event_log=ev,
+                      chaos=FaultInjector(plan, events=ev), health=health)
+    if spec is None:   # blacklist-forced shrink cell
+        health.record_failure("gpu-node-0", _PRESTRIKE)
+    job = _elastic_job()
+    app_id = rm.submit_application(job.name, job.queue)
+    am = ApplicationMaster(
+        rm, app_id, job, _gang_step_program(),
+        retry_policy=RetryPolicy(max_attempts=3).with_clock(lambda s: None))
+    am.NEGOTIATION_TIMEOUT_S = 0.4
+    am.heartbeat_timeout_s = 1.0
+    box = {}
+    t = threading.Thread(target=lambda: box.update(result=am.run()),
+                         daemon=True)
+    t.start()
+    t.join(45)
+    assert not t.is_alive(), "elastic cell hung (no termination in 45s)"
+    return box["result"], rm, ev
+
+
+@pytest.mark.parametrize("label,spec", ELASTIC_MATRIX,
+                         ids=[m[0] for m in ELASTIC_MATRIX])
+def test_elastic_matrix_terminates_leak_free(label, spec):
+    res, rm, ev = _run_elastic_cell(spec)
+    if not res.succeeded:
+        assert res.diagnostics, f"{label}: failed with no diagnostics"
+    for key, d in res.diagnostics.items():
+        assert isinstance(d.classification, FailureClass), \
+            f"{label}: unclassified diagnostic {key}"
+    # a degraded run must say so end to end: report, events, history inputs
+    for rep in res.attempts:
+        if rep.degraded:
+            assert rep.attempt in res.resized_attempts, \
+                f"{label}: degraded attempt missing from resized_attempts"
+            assert ev.count("gang_resized") + ev.count("attempt_degraded") \
+                >= 1, f"{label}: degraded without elastic events"
+    assert not rm.live_containers(), f"{label}: leaked containers"
+    assert rm.invariants_ok(), f"{label}: RM invariants violated"
+    if spec is not None:
+        assert ev.count("chaos_injected") >= 1, f"{label}: fault never fired"
+    else:
+        assert res.succeeded and res.resized_attempts, \
+            f"{label}: blacklist shrink cell must complete degraded"
+
+
+def test_elastic_matrix_is_deterministic_for_fixed_seed():
+    """Same seed -> same elastic trajectory (shed cell run twice)."""
+    def run_once():
+        res, _rm, ev = _run_elastic_cell(
+            FaultSpec(FaultKind.OOM, task="worker:1", at_step=2))
+        return (res.final_status, len(res.attempts),
+                {a: sorted(c.items()) for a, c in res.resized_attempts.items()},
+                [r.shed_tasks for r in res.attempts])
+
+    assert run_once() == run_once()
 
 
 def test_matrix_is_deterministic_for_fixed_seed():

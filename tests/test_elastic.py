@@ -1,0 +1,455 @@
+"""Elastic gang resize: degrade instead of die.
+
+Units (tier-1): allocate_up_to partial grants, min-instances config
+parsing/validation, per-queue blacklist scopes, barrier shrink.
+
+Chaos-marked e2e: the acceptance trajectory — a 4-worker min-2 job on a
+cluster where blacklisting leaves room for only 3 launches degraded and
+completes; after parole a follow-up attempt regrows to 4; mid-attempt INFRA
+losses above the floor shed the member and the attempt continues; partitions
+during rendezvous ride out (time-gated) or burn one attempt (step-gated).
+All deterministic under CHAOS_SEED=1234 and leak-free.
+"""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AllocationError,
+    ApplicationMaster,
+    ContainerRequest,
+    EventLog,
+    FailureClass,
+    FaultInjector,
+    FaultKind,
+    FaultPlan,
+    FaultSpec,
+    NodeHealthTracker,
+    Resource,
+    RetryPolicy,
+    TaskDiagnostics,
+    job_spec_from_props,
+    make_cluster,
+    to_tony_xml,
+)
+from repro.core.task_executor import CancellableBarrier
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "1234"))
+
+INFRA_DIAG = TaskDiagnostics(task_id="worker:0", exit_status=137,
+                             classification=FailureClass.INFRA,
+                             message="synthetic infra failure")
+
+WORKER_REQ = ContainerRequest(Resource(1024, 1, 1), "gpu")
+
+
+def _one_slot_cluster(n=4, events=None, chaos=None, health=None):
+    """n gpu nodes that each fit exactly one 1-GPU worker."""
+    return make_cluster(num_gpu_nodes=n, num_cpu_nodes=0, gpus_per_node=1,
+                        memory_mb=2048, vcores=4, event_log=events,
+                        chaos=chaos, health=health)
+
+
+def _elastic_job(workers=4, min_workers=2, attempts=3):
+    return job_spec_from_props({
+        "tony.application.name": "elastic",
+        "tony.application.max-attempts": str(attempts),
+        "tony.worker.instances": str(workers),
+        "tony.worker.min-instances": str(min_workers),
+        "tony.worker.memory": "1024",
+        "tony.worker.vcores": "1",
+        "tony.worker.gpus": "1",
+        "tony.worker.node-label": "gpu",
+    })
+
+
+def _gang_program(steps=6, final_rendezvous=True):
+    """Every member steps (so per-task chaos can fire on any of them); the
+    lead worker drives, others mirror its progress like launch/programs.py."""
+    def program(env, ctx):
+        task_id = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not ctx.rendezvous(timeout=10, exec_id=task_id, attempt=attempt):
+            return 3
+        if task_id == "worker:0":
+            start = int(ctx.shared.get("resume_step", 0))
+            try:
+                for step in range(start, steps):
+                    if ctx.cancel.is_set():
+                        return 143
+                    ctx.step(task_id, attempt, step)
+                    time.sleep(0.005)
+                    if (step + 1) % 2 == 0:
+                        ctx.shared["ckpt_step"] = step + 1
+            finally:
+                ctx.shared["done"] = True
+        else:
+            my_step = -1
+            while not ctx.cancel.is_set() and not ctx.shared.get("done"):
+                lead = ctx.progress.get("worker:0", -1)
+                if my_step < lead:
+                    my_step += 1
+                    ctx.step(task_id, attempt, my_step)
+                else:
+                    time.sleep(0.002)
+        if final_rendezvous:
+            ctx.rendezvous(timeout=5, exec_id=task_id, attempt=attempt)
+        return 0
+
+    return program
+
+
+def _run_am(rm, job, program, max_attempts=3, negotiation_s=0.4,
+            sleep=lambda s: None, timeout=45):
+    app_id = rm.submit_application(job.name, job.queue)
+    am = ApplicationMaster(
+        rm, app_id, job, program,
+        retry_policy=RetryPolicy(max_attempts=max_attempts).with_clock(sleep))
+    am.NEGOTIATION_TIMEOUT_S = negotiation_s
+    am.heartbeat_timeout_s = 1.0
+    box = {}
+    t = threading.Thread(target=lambda: box.update(result=am.run()),
+                         daemon=True)
+    t.start()
+    t.join(timeout)
+    assert not t.is_alive(), "AM hung"
+    return box["result"]
+
+
+# ----------------------------------------------------------------------
+# allocate_up_to units
+
+def test_allocate_up_to_partial_grant_above_minimum():
+    ev = EventLog()
+    rm = _one_slot_cluster(3, events=ev)
+    app = rm.submit_application("j", "default")
+    got = rm.allocate_up_to(app, WORKER_REQ, 4, minimum=2)
+    assert len(got) == 3
+    assert ev.count("partial_allocation") == 1
+    p = ev.of_kind("partial_allocation")[0].payload
+    assert (p["granted"], p["requested"], p["minimum"]) == (3, 4, 2)
+    assert rm.invariants_ok()
+    for c in got:
+        rm.release(c.container_id)
+    assert not rm.live_containers()
+
+
+def test_allocate_up_to_below_minimum_releases_everything():
+    ev = EventLog()
+    rm = _one_slot_cluster(3, events=ev)
+    app = rm.submit_application("j", "default")
+    with pytest.raises(AllocationError):
+        rm.allocate_up_to(app, WORKER_REQ, 6, minimum=4)
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+    assert ev.count("partial_allocation") == 0
+
+
+def test_allocate_up_to_full_grant_emits_no_partial_event():
+    ev = EventLog()
+    rm = _one_slot_cluster(4, events=ev)
+    app = rm.submit_application("j", "default")
+    got = rm.allocate_up_to(app, WORKER_REQ, 3, minimum=2)
+    assert len(got) == 3
+    assert ev.count("partial_allocation") == 0
+
+
+def test_allocate_up_to_chaos_midway_no_leak():
+    """FAIL_ALLOCATION mid-gang: below the minimum every straggler container
+    is released (satellite: no leaks on partial gang allocation)."""
+    ev = EventLog()
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.FAIL_ALLOCATION, after_allocs=2, count=1))
+    rm = _one_slot_cluster(4, events=ev,
+                           chaos=FaultInjector(plan, events=ev))
+    app = rm.submit_application("j", "default")
+    with pytest.raises(AllocationError):
+        rm.allocate_up_to(app, WORKER_REQ, 4, minimum=3)
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+# ----------------------------------------------------------------------
+# min-instances config units
+
+def test_min_instances_parsing_and_roundtrip():
+    job = _elastic_job(workers=4, min_workers=2)
+    t = job.tasks["worker"]
+    assert t.min_instances == 2 and t.floor == 2 and t.elastic
+    xml = to_tony_xml(job)
+    again = job_spec_from_props(
+        {"tony.worker.instances": "4", "tony.worker.min-instances": "2",
+         "tony.application.name": "x"})
+    assert again.tasks["worker"].min_instances == 2
+    assert "min-instances" in xml
+
+
+def test_min_instances_defaults_to_rigid():
+    job = job_spec_from_props({"tony.application.name": "x",
+                               "tony.worker.instances": "4"})
+    t = job.tasks["worker"]
+    assert t.min_instances is None and t.floor == 4 and not t.elastic
+
+
+@pytest.mark.parametrize("bad", ["0", "5", "-1"])
+def test_min_instances_validation_rejects_out_of_range(bad):
+    with pytest.raises(ValueError):
+        job_spec_from_props({"tony.application.name": "x",
+                             "tony.worker.instances": "4",
+                             "tony.worker.min-instances": bad})
+
+
+# ----------------------------------------------------------------------
+# per-queue blacklist scopes (satellite)
+
+def test_blacklist_scopes_are_isolated():
+    tr = NodeHealthTracker(threshold=2, parole_s=60.0)
+    for _ in range(2):
+        tr.record_failure("n0", INFRA_DIAG, scope="prod")
+    assert tr.is_blacklisted("n0", "prod")
+    assert not tr.is_blacklisted("n0", "dev")
+    assert tr.blacklisted(scope="prod") == ["n0"]
+    assert tr.blacklisted(scope="dev") == []
+    assert tr.blacklisted() == ["n0"]          # union across scopes
+    snap = tr.snapshot()
+    assert snap["failures"] == {"n0@prod": 2}
+    assert snap["blacklisted"] == ["n0@prod"]
+
+
+def test_blacklist_parole_is_per_scope():
+    t = [0.0]
+    tr = NodeHealthTracker(threshold=1, parole_s=10.0, clock=lambda: t[0])
+    tr.record_failure("n0", INFRA_DIAG, scope="prod")
+    tr.record_failure("n0", INFRA_DIAG, scope="dev")
+    assert tr.is_blacklisted("n0", "prod") and tr.is_blacklisted("n0", "dev")
+    t[0] = 11.0
+    # parole in one scope does not touch the other's deadline bookkeeping
+    assert not tr.is_blacklisted("n0", "prod")
+    assert tr.snapshot()["failures"]["n0@prod"] == 0  # threshold-1
+    assert not tr.is_blacklisted("n0", "dev")
+
+
+def test_rm_strikes_under_one_queue_spare_the_other():
+    ev = EventLog()
+    rm = make_cluster(num_gpu_nodes=1, num_cpu_nodes=0, gpus_per_node=4,
+                      event_log=ev, queues={"prod": 0.5, "dev": 0.5})
+    node = next(iter(rm.nodes))
+    for _ in range(3):
+        rm.report_node_failure(node, INFRA_DIAG, queue="prod")
+    app_prod = rm.submit_application("p", "prod")
+    app_dev = rm.submit_application("d", "dev")
+    with pytest.raises(AllocationError):
+        rm.allocate(app_prod, WORKER_REQ)
+    c = rm.allocate(app_dev, WORKER_REQ)      # dev placement unaffected
+    assert c.node_id == node
+    rm.release(c.container_id)
+    assert rm.invariants_ok()
+
+
+# ----------------------------------------------------------------------
+# barrier shrink unit
+
+def test_barrier_reduce_releases_current_waiters():
+    b = CancellableBarrier(3)
+    results = []
+    threads = [threading.Thread(
+        target=lambda: results.append(b.wait(timeout=5.0)), daemon=True)
+        for _ in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(0.1)
+    b.reduce(1)                                # 3 -> 2: both waiters form a gang
+    for t in threads:
+        t.join(5.0)
+    assert results == [True, True]
+    assert b.n == 2
+
+
+# ----------------------------------------------------------------------
+# chaos e2e: the acceptance trajectories
+
+@pytest.mark.chaos
+def test_degraded_launch_on_blacklist_shrunk_cluster():
+    """4-worker min-2 job, 4 one-slot nodes, one pre-blacklisted: the
+    attempt launches with 3 workers and completes degraded."""
+    ev = EventLog()
+    health = NodeHealthTracker(threshold=1, parole_s=3600.0, events=ev)
+    rm = _one_slot_cluster(4, events=ev, health=health)
+    health.record_failure("gpu-node-0", INFRA_DIAG)
+    res = _run_am(rm, _elastic_job(), _gang_program())
+
+    assert res.succeeded
+    assert len(res.attempts) == 1
+    assert res.resized_attempts == {1: {"worker": 3}}
+    assert ev.count("gang_resized") == 1
+    assert ev.of_kind("gang_resized")[0].payload["reason"] == \
+        "allocation_shortfall"
+    assert ev.count("attempt_degraded") == 1
+    d = ev.of_kind("attempt_degraded")[0].payload
+    assert (d["world_size"], d["target_world"]) == (3, 4)
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+@pytest.mark.chaos
+def test_regrow_to_full_gang_after_parole():
+    """Attempt 1 runs degraded (one node blacklisted); a chaos kill forces a
+    retry, the retry backoff outlives the parole window, and attempt 2
+    regrows to the full 4-worker gang."""
+    t = [0.0]
+    ev = EventLog()
+    health = NodeHealthTracker(threshold=1, parole_s=5.0,
+                               clock=lambda: t[0], events=ev)
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.KILL_TASK, task="worker:0", attempt=1, at_step=3))
+    rm = _one_slot_cluster(4, events=ev,
+                           chaos=FaultInjector(plan, events=ev),
+                           health=health)
+    health.record_failure("gpu-node-0", INFRA_DIAG)
+
+    def sleep_advances_parole(_s):
+        t[0] += 10.0                    # retry backoff outlives parole
+
+    res = _run_am(rm, _elastic_job(), _gang_program(),
+                  sleep=sleep_advances_parole)
+
+    assert res.succeeded
+    assert len(res.attempts) == 2
+    assert res.attempts[0].degraded and not res.attempts[1].degraded
+    assert res.resized_attempts == {1: {"worker": 3}}
+    assert res.attempts[1].task_counts == {"worker": 4}
+    assert ev.count("node_paroled") == 1
+    assert ev.count("gang_regrown") == 1
+    g = ev.of_kind("gang_regrown")[0].payload
+    assert (g["from_world"], g["world_size"]) == (3, 4)
+    # checkpoint recovery stayed intact across the degraded attempt
+    assert res.attempts[1].resume_step == 2
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+@pytest.mark.chaos
+def test_mid_attempt_infra_loss_sheds_member_and_continues():
+    """An OOM (INFRA) on a non-chief elastic worker above the floor removes
+    it from the gang; the attempt finishes degraded instead of retrying."""
+    ev = EventLog()
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.OOM, task="worker:1", at_step=2))
+    rm = _one_slot_cluster(4, events=ev, chaos=FaultInjector(plan, events=ev))
+    res = _run_am(rm, _elastic_job(), _gang_program())
+
+    assert res.succeeded
+    assert len(res.attempts) == 1
+    rep = res.attempts[0]
+    assert rep.shed_tasks == ["worker:1"]
+    assert rep.task_counts == {"worker": 4}
+    assert rep.final_counts() == {"worker": 3}
+    assert res.resized_attempts == {1: {"worker": 3}}
+    resized = ev.of_kind("gang_resized")
+    assert len(resized) == 1 and resized[0].payload["reason"] == "infra_loss"
+    # the shed worker's node was charged despite the gang's success
+    assert rm.health.snapshot()["failures"]
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+@pytest.mark.chaos
+def test_shed_never_drops_below_floor():
+    """First INFRA loss sheds down to the floor; a second one below the
+    floor tears the attempt down instead. The retry (faults spent) succeeds
+    with the full gang."""
+    ev = EventLog()
+    plan = (FaultPlan(seed=CHAOS_SEED)
+            .add(FaultSpec(FaultKind.OOM, task="worker:1", at_step=1))
+            .add(FaultSpec(FaultKind.OOM, task="worker:2", at_step=5)))
+    rm = _one_slot_cluster(3, events=ev, chaos=FaultInjector(plan, events=ev))
+    res = _run_am(rm, _elastic_job(workers=3, min_workers=2), _gang_program())
+
+    assert res.succeeded
+    assert len(res.attempts) == 2
+    first = res.attempts[0]
+    assert first.shed_tasks == ["worker:1"]     # 3 -> 2: at the floor
+    assert "worker:2" in first.failed_tasks     # 2 -> 1 would breach it
+    assert ev.count("gang_resized") == 1
+    assert not res.attempts[1].shed_tasks
+    assert res.attempts[1].task_counts == {"worker": 3}
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+@pytest.mark.chaos
+def test_partition_during_rendezvous_rides_out():
+    """A time-gated partition blocks one endpoint's rendezvous for its
+    window; the gang forms afterwards and the job completes in one attempt."""
+    ev = EventLog()
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.PARTITION, src="worker:1", dst="worker:0",
+                  attempt=1, after_s=0.0, duration_s=0.3))
+    rm = _one_slot_cluster(4, events=ev, chaos=FaultInjector(plan, events=ev))
+    res = _run_am(rm, _elastic_job(), _gang_program())
+
+    assert res.succeeded
+    assert len(res.attempts) == 1
+    fired = [e for e in ev.of_kind("chaos_injected")
+             if e.payload.get("fault") == "partition"]
+    assert fired and fired[0].payload["task"] == "worker:1"
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+@pytest.mark.chaos
+def test_step_gated_partition_burns_one_attempt():
+    """A step-gated partition raises ChaosPartition in the src task: the
+    attempt dies TRANSIENT and the retry succeeds."""
+    ev = EventLog()
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.PARTITION, src="worker:0", dst="worker:2",
+                  attempt=1, at_step=2))
+    rm = _one_slot_cluster(4, events=ev, chaos=FaultInjector(plan, events=ev))
+    res = _run_am(rm, _elastic_job(), _gang_program())
+
+    assert res.succeeded
+    assert len(res.attempts) == 2
+    diag = res.attempts[0].diagnostics["worker:0"]
+    assert diag.exception_type == "ChaosPartition"
+    assert diag.classification is FailureClass.TRANSIENT
+    # a partition must never poison the blacklist
+    assert ev.count("node_blacklisted") == 0
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+
+
+@pytest.mark.chaos
+def test_elastic_trajectory_deterministic_for_fixed_seed():
+    def run_once():
+        ev = EventLog()
+        health = NodeHealthTracker(threshold=1, parole_s=3600.0, events=ev)
+        rm = _one_slot_cluster(4, events=ev, health=health)
+        health.record_failure("gpu-node-0", INFRA_DIAG)
+        res = _run_am(rm, _elastic_job(), _gang_program())
+        return (res.final_status, len(res.attempts),
+                {a: sorted(c.items())
+                 for a, c in res.resized_attempts.items()},
+                [e.kind for e in ev.failure_timeline()
+                 if e.kind in ("gang_resized", "attempt_degraded",
+                               "gang_regrown", "partial_allocation")])
+
+    assert run_once() == run_once()
+
+
+@pytest.mark.chaos
+def test_fail_allocation_during_elastic_negotiation_is_leak_free():
+    """FAIL_ALLOCATION chaos mid-negotiation: whether the AM rides it out,
+    downsizes, or fails the attempt, nothing leaks (satellite)."""
+    ev = EventLog()
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.FAIL_ALLOCATION, after_allocs=2, count=2))
+    rm = _one_slot_cluster(4, events=ev, chaos=FaultInjector(plan, events=ev))
+    res = _run_am(rm, _elastic_job(), _gang_program())
+
+    assert res.succeeded                       # chaos burns out, gang forms
+    assert not rm.live_containers()
+    assert rm.invariants_ok()
+    assert ev.count("chaos_injected") >= 1
