@@ -1,10 +1,23 @@
 """Orchestration benchmarks — TonY has no tables, so these quantify the
 lifecycle claims of §2/§3: submission latency vs job size, RM allocation
-throughput, registration->spec barrier cost, and fault-recovery overhead."""
+throughput, registration->spec barrier cost, fault-recovery overhead, and
+the checkpoint/data stall the async critical path removes.
+
+  PYTHONPATH=src python -m benchmarks.orchestration [--smoke] \
+      [--json BENCH_orchestration.json]
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import statistics
+import tempfile
 import time
 
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, Checkpointer
+from repro.data import PrefetchingLoader, SyntheticLMDataset
 from repro.core import (
     ApplicationMaster,
     ContainerRequest,
@@ -244,7 +257,104 @@ def bench_elastic_resize() -> list[tuple[str, float, str]]:
              "min-instances=2 downsizes to 3 and finishes")]
 
 
-def all_benches() -> list[tuple[str, float, str]]:
+def _busy_wait(seconds: float) -> None:
+    """Simulated accelerator step: occupy the wall clock without yielding so
+    long that timing noise dominates (sleep granularity is fine here — the
+    background writer/producer threads get plenty of air either way)."""
+    time.sleep(seconds)
+
+
+def bench_checkpoint_stall(smoke: bool = False) -> list[tuple[str, float, str]]:
+    """Per-checkpoint step-time spike, sync vs async writer: the step that
+    lands on a checkpoint boundary pays the whole npz write on the sync path
+    and only the host snapshot + hand-off on the async path. The headline
+    acceptance number: async must cut the spike >= 2x."""
+    steps, ckpt_every = (18, 6) if smoke else (30, 6)
+    work_s = 0.01
+    # ~4 MB state: big enough that the blocking write dwarfs timer noise,
+    # small enough that the write fits inside the ckpt_every window (no
+    # steady-state backpressure on the async path)
+    tree = {f"w{i}": np.full((256, 1024), float(i), np.float32)
+            for i in range(4)}
+
+    def run(use_async: bool) -> tuple[float, float]:
+        d = tempfile.mkdtemp(prefix="bench-ckpt-")
+        ckpt = AsyncCheckpointer(d) if use_async else Checkpointer(d)
+        ckpt_times, plain_times = [], []
+        try:
+            for step in range(steps):
+                t0 = time.monotonic()
+                _busy_wait(work_s)
+                is_ckpt = (step + 1) % ckpt_every == 0
+                if is_ckpt:
+                    ckpt.save(tree, step + 1)
+                (ckpt_times if is_ckpt else plain_times).append(
+                    time.monotonic() - t0)
+        finally:
+            if use_async:
+                ckpt.flush()
+                ckpt.close()
+        baseline = statistics.median(plain_times)
+        spike = max(0.0, statistics.mean(ckpt_times) - baseline)
+        return spike, baseline
+
+    spike_sync, base_sync = run(False)
+    spike_async, base_async = run(True)
+    ratio = spike_sync / max(spike_async, 1e-6)
+    assert ratio >= 2.0, (
+        f"async checkpointing must cut the per-checkpoint spike >= 2x: "
+        f"sync={spike_sync*1e3:.2f}ms async={spike_async*1e3:.2f}ms")
+    return [
+        ("ckpt_stall_sync", spike_sync * 1e6,
+         f"blocking npz write on the step; baseline={base_sync*1e3:.1f}ms"),
+        ("ckpt_stall_async", spike_async * 1e6,
+         f"snapshot+handoff only; spike cut {ratio:.1f}x"),
+    ]
+
+
+def bench_train_stall_breakdown(smoke: bool = False) -> list[tuple[str, float, str]]:
+    """Steady-state step-time breakdown over the four (data, ckpt) pipeline
+    combinations: how much of each step is batch construction vs checkpoint
+    write vs actual compute. The async+prefetch cell is the shipped default."""
+    steps, ckpt_every = (24, 8) if smoke else (48, 8)
+    work_s = 0.004
+    B, T = (64, 256) if smoke else (128, 512)
+    tree = {"w": np.full((256, 1024), 1.0, np.float32)}   # 1 MB state
+
+    def run(prefetch: bool, use_async: bool) -> float:
+        data = SyntheticLMDataset(B, T, vocab_size=8192, seed=0)
+        if prefetch:
+            data = PrefetchingLoader(data, depth=2)
+        d = tempfile.mkdtemp(prefix="bench-stall-")
+        ckpt = AsyncCheckpointer(d) if use_async else Checkpointer(d)
+        t0 = time.monotonic()
+        try:
+            for step in range(steps):
+                data.next_batch()
+                _busy_wait(work_s)
+                if (step + 1) % ckpt_every == 0:
+                    ckpt.save(tree, step + 1)
+        finally:
+            if use_async:
+                ckpt.flush()
+                ckpt.close()
+            if prefetch:
+                data.close()
+        return (time.monotonic() - t0) / steps
+
+    rows = []
+    for prefetch, use_async, label in [
+            (False, False, "sync_data_sync_ckpt"),
+            (True, False, "prefetch_data_sync_ckpt"),
+            (False, True, "sync_data_async_ckpt"),
+            (True, True, "prefetch_data_async_ckpt")]:
+        dt = run(prefetch, use_async)
+        rows.append((f"train_stall_{label}", dt * 1e6,
+                     f"mean step over {steps} steps, ckpt every {ckpt_every}"))
+    return rows
+
+
+def all_benches(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
     rows += bench_allocation_throughput()
     rows += bench_job_lifecycle_latency()
@@ -252,4 +362,30 @@ def all_benches() -> list[tuple[str, float, str]]:
     rows += bench_fault_recovery_overhead()
     rows += bench_speculation_straggler()
     rows += bench_elastic_resize()
+    rows += bench_checkpoint_stall(smoke=smoke)
+    rows += bench_train_stall_breakdown(smoke=smoke)
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale for the CI bench-smoke job")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as a JSON benchmark artifact")
+    args = ap.parse_args()
+    rows = all_benches(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suite": "orchestration", "smoke": args.smoke,
+                       "rows": [{"name": n, "us_per_call": round(us, 1),
+                                 "derived": d} for n, us, d in rows]},
+                      f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

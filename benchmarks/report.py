@@ -1,7 +1,10 @@
-"""Assemble EXPERIMENTS.md from the dry-run artifacts + the hand-written perf
-ledger (experiments/perf_ledger.md).
+"""Assemble EXPERIMENTS.md from the dry-run artifacts, the measured-benchmark
+JSON artifacts (``BENCH_*.json`` from ``benchmarks/orchestration.py`` /
+``benchmarks/training.py`` — the CI bench-smoke job's trajectory), and the
+hand-written perf ledger (experiments/perf_ledger.md).
 
-  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun] \
+      [--bench BENCH_orchestration.json BENCH_training.json]
 """
 from __future__ import annotations
 
@@ -100,14 +103,43 @@ def roofline_section(terms: list[dict]) -> str:
     return "\n".join(out)
 
 
+def bench_section(paths: list[str]) -> str:
+    """Render measured-benchmark JSON artifacts (CI bench-smoke trajectory)."""
+    rows = ["## §Benchmarks — measured (CPU, smoke scale)", "",
+            "| suite | name | us/call | derived |", "|---|---|---|---|"]
+    n = 0
+    for path in paths:
+        if not os.path.exists(path):
+            rows.append(f"| — | ({os.path.basename(path)} missing) | — | — |")
+            continue
+        with open(path) as f:
+            art = json.load(f)
+        for r in art.get("rows", []):
+            n += 1
+            rows.append(f"| {art.get('suite', '?')} | {r['name']} "
+                        f"| {r['us_per_call']:.1f} | {r['derived']} |")
+    rows.insert(1, f"\n**{n} measured rows** — the per-PR baseline the "
+                   "perf acceptance criteria diff against.\n")
+    return "\n".join(rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     ap.add_argument("--perf-ledger", default="experiments/perf_ledger.md")
+    ap.add_argument("--bench", nargs="*", default=[],
+                    help="BENCH_*.json artifacts to fold into the report")
     args = ap.parse_args()
-    terms, compiles = summarize(args.dir)
-    parts = [HEADER, dryrun_section(compiles), "", roofline_section(terms), ""]
+    if os.path.isdir(args.dir):
+        terms, compiles = summarize(args.dir)
+    else:
+        terms, compiles = [], []     # bench-smoke runs without dry-run output
+    parts = [HEADER]
+    if compiles:
+        parts += [dryrun_section(compiles), "", roofline_section(terms), ""]
+    if args.bench:
+        parts += [bench_section(args.bench), ""]
     if os.path.exists(args.perf_ledger):
         parts.append(open(args.perf_ledger).read())
     else:
@@ -115,7 +147,7 @@ def main() -> None:
     with open(args.out, "w") as f:
         f.write("\n".join(parts))
     print(f"wrote {args.out}: {len(compiles)} compile records, "
-          f"{len(terms)} roofline rows")
+          f"{len(terms)} roofline rows, {len(args.bench)} bench artifacts")
 
 
 if __name__ == "__main__":

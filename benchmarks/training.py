@@ -1,7 +1,12 @@
 """Training / serving throughput micro-benchmarks (CPU smoke scale) — the ML
-side of the jobs TonY orchestrates."""
+side of the jobs TonY orchestrates.
+
+  PYTHONPATH=src python -m benchmarks.training [--json BENCH_training.json]
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -79,3 +84,28 @@ def bench_kernels() -> list[tuple[str, float, str]]:
 
 def all_benches() -> list[tuple[str, float, str]]:
     return bench_train_step() + bench_decode_step() + bench_kernels()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for CI symmetry (these benches already "
+                         "run at smoke scale)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as a JSON benchmark artifact")
+    args = ap.parse_args()
+    rows = all_benches()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suite": "training", "smoke": args.smoke,
+                       "rows": [{"name": n, "us_per_call": round(us, 1),
+                                 "derived": d} for n, us, d in rows]},
+                      f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

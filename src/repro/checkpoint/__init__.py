@@ -1,8 +1,10 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
+    AsyncCheckpointer,
     Checkpointer,
     is_committed,
     latest_step,
     restore_pytree,
     save_pytree,
     step_dir,
+    tree_nbytes,
 )

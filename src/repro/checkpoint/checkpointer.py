@@ -11,6 +11,15 @@ relies on.
 
 The pre-PR-7 flat layout (``ckpt_<n>.npz``, atomic by rename alone) is still
 readable so existing checkpoint directories keep working.
+
+``AsyncCheckpointer`` moves the npz write off the training critical path: the
+caller's ``save`` only snapshots device arrays to host and hands them to a
+single background writer thread (bounded, depth 1 — a second save while one
+is in flight blocks, never queues unboundedly). The writer reuses the same
+staged-dir + COMMIT + atomic-rename protocol, and the ``on_commit`` callback
+fires *from the writer, after the rename* — so anything published off it
+(``ctx.shared["ckpt_step"]``) can only ever name a committed step, keeping
+the AM's ``resume_step`` contract byte-identical to the sync path.
 """
 from __future__ import annotations
 
@@ -19,6 +28,9 @@ import os
 import re
 import shutil
 import tempfile
+import threading
+import time
+from typing import Callable
 
 import jax
 import numpy as np
@@ -26,20 +38,50 @@ import numpy as np
 _SEP = "|"
 _STEP_DIR = re.compile(r"step_(\d{8})")
 _LEGACY_FILE = re.compile(r"ckpt_(\d{8})\.npz")
+# re-checkpointing an existing step renames the old committed dir aside
+# under this pattern before the replace; until the replace lands, the aside
+# copy still counts as committed (no window where the step is lost)
+_ASIDE_DIR = re.compile(r"\.aside-step_(\d{8})-.*")
 COMMIT_MARKER = "COMMIT"
 ARRAYS_FILE = "arrays.npz"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
-    flat = {}
+    items = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        flat[key] = np.asarray(leaf)
-    return flat
+        items.append((key, leaf))
+    # start every device->host transfer before materializing any of them, so
+    # the copies overlap instead of serializing one blocking d2h at a time
+    for _, leaf in items:
+        if hasattr(leaf, "copy_to_host_async"):
+            try:
+                leaf.copy_to_host_async()
+            except Exception:  # noqa: BLE001 - committed buffers still readable
+                pass
+    return {key: np.asarray(leaf) for key, leaf in items}
+
+
+def tree_nbytes(tree) -> int:
+    """Total leaf bytes — the payload size a checkpoint of ``tree`` writes."""
+    return int(sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree)))
 
 
 def step_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"step_{step:08d}")
+
+
+def _aside_dirs(directory: str, step: int) -> list[str]:
+    """Committed aside copies of ``step`` (old dir renamed out of the way by
+    a re-checkpoint that hasn't finished — or was killed mid-swap)."""
+    try:
+        entries = os.listdir(directory)
+    except OSError:
+        return []
+    return sorted(
+        os.path.join(directory, e) for e in entries
+        if (m := _ASIDE_DIR.fullmatch(e)) and int(m.group(1)) == step
+        and os.path.exists(os.path.join(directory, e, COMMIT_MARKER)))
 
 
 def is_committed(directory: str, step: int) -> bool:
@@ -47,13 +89,26 @@ def is_committed(directory: str, step: int) -> bool:
     flat file, which was atomic by rename)."""
     if os.path.exists(os.path.join(step_dir(directory, step), COMMIT_MARKER)):
         return True
+    if _aside_dirs(directory, step):
+        return True
     return os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
 
 
-def save_pytree(tree, directory: str, step: int) -> str:
+def save_pytree(tree, directory: str, step: int,
+                pre_commit: Callable[[], None] | None = None) -> str:
     """Write one checkpoint: stage into a tmp dir, add the COMMIT marker,
     atomically rename into place. A concurrent reader never observes a
-    committed-but-incomplete step."""
+    committed-but-incomplete step.
+
+    Re-checkpointing an existing step never opens a lost-step window: the
+    old committed dir is renamed aside (where ``latest_step``/``restore``
+    still recognize it) and removed only after the replace lands — a kill at
+    any point leaves either the old or the new committed copy visible.
+
+    ``pre_commit`` (used by the chaos harness) runs after the arrays are
+    staged and before the COMMIT marker is written — the writer-window kill
+    point.
+    """
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     final = step_dir(directory, step)
@@ -61,11 +116,18 @@ def save_pytree(tree, directory: str, step: int) -> str:
     try:
         with open(os.path.join(tmp, ARRAYS_FILE), "wb") as f:
             np.savez(f, **flat)
+        if pre_commit is not None:
+            pre_commit()
         with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
             json.dump({"step": step, "arrays": len(flat)}, f)
+        aside = None
         if os.path.isdir(final):          # re-checkpointing the same step
-            shutil.rmtree(final)
+            aside = os.path.join(
+                directory, f".aside-step_{step:08d}-{os.urandom(4).hex()}")
+            os.rename(final, aside)
         os.replace(tmp, final)
+        if aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
     finally:
         if os.path.isdir(tmp):
             shutil.rmtree(tmp, ignore_errors=True)
@@ -74,7 +136,8 @@ def save_pytree(tree, directory: str, step: int) -> str:
 
 def _committed_steps(directory: str) -> list[int]:
     """All fully-written steps, tolerating junk: non-step entries, staging
-    dirs and half-written (marker-less) steps are skipped, not errors."""
+    dirs and half-written (marker-less) steps are skipped, not errors.
+    Committed aside copies (a re-checkpoint killed mid-swap) still count."""
     steps = set()
     try:
         entries = os.listdir(directory)
@@ -86,6 +149,9 @@ def _committed_steps(directory: str) -> list[int]:
                 steps.add(int(m.group(1)))
         elif (m := _LEGACY_FILE.fullmatch(entry)):
             steps.add(int(m.group(1)))
+        elif (m := _ASIDE_DIR.fullmatch(entry)):
+            if os.path.exists(os.path.join(directory, entry, COMMIT_MARKER)):
+                steps.add(int(m.group(1)))
     return sorted(steps)
 
 
@@ -103,12 +169,20 @@ def restore_pytree(template, directory: str, step: int | None = None):
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(step_dir(directory, step), ARRAYS_FILE)
-    if not (os.path.exists(path) and is_committed(directory, step)):
+    if not (os.path.exists(path)
+            and os.path.exists(os.path.join(step_dir(directory, step),
+                                            COMMIT_MARKER))):
+        # a re-checkpoint killed mid-swap leaves the old committed copy
+        # aside; fall back to it, then to the legacy flat layout
+        asides = _aside_dirs(directory, step)
         legacy = os.path.join(directory, f"ckpt_{step:08d}.npz")
-        if not os.path.exists(legacy):
+        if asides:
+            path = os.path.join(asides[-1], ARRAYS_FILE)
+        elif os.path.exists(legacy):
+            path = legacy
+        else:
             raise FileNotFoundError(
                 f"no committed checkpoint for step {step} in {directory}")
-        path = legacy
     with np.load(path) as data:
         flat = dict(data)
     keys = []
@@ -150,8 +224,10 @@ class Checkpointer:
         if not os.path.isdir(self.directory):
             return
         for step in _committed_steps(self.directory)[:-self.keep]:
-            for victim in (step_dir(self.directory, step),
-                           os.path.join(self.directory, f"ckpt_{step:08d}.npz")):
+            victims = [step_dir(self.directory, step),
+                       os.path.join(self.directory, f"ckpt_{step:08d}.npz")]
+            victims += _aside_dirs(self.directory, step)
+            for victim in victims:
                 try:
                     if os.path.isdir(victim):
                         shutil.rmtree(victim)
@@ -159,3 +235,113 @@ class Checkpointer:
                         os.unlink(victim)
                 except OSError:
                     pass  # lost a race with another gc/writer — fine
+        # stale aside copies (re-checkpoint killed after the replace landed
+        # but before cleanup) are redundant once the final dir is committed
+        for step in _committed_steps(self.directory):
+            if os.path.exists(os.path.join(step_dir(self.directory, step),
+                                           COMMIT_MARKER)):
+                for aside in _aside_dirs(self.directory, step):
+                    shutil.rmtree(aside, ignore_errors=True)
+
+
+class AsyncCheckpointer(Checkpointer):
+    """Double-buffered checkpointing off the training critical path.
+
+    ``save(tree, step)`` snapshots the pytree to host (overlapped d2h
+    transfers) and hands the flat tree to a single background writer thread.
+    The hand-off slot is depth 1: a second ``save`` while a write is in
+    flight *blocks* until the writer commits — bounded memory, never an
+    unbounded queue of snapshots.
+
+    The writer reuses ``save_pytree``'s staged-dir + COMMIT + atomic-rename
+    protocol and invokes ``on_commit(step, path, duration_s, nbytes)`` only
+    after the rename lands — publishing ``ctx.shared["ckpt_step"]`` from
+    that callback preserves the resume contract exactly: a kill mid-write
+    resumes from the previous committed step.
+
+    A writer-side failure (including a chaos kill injected via
+    ``chaos_hook(step)``, which fires inside the writer window between
+    staging and commit) is sticky: it re-raises from the next ``save`` or
+    ``flush`` on the training thread, so the task dies and the AM's retry
+    path takes over.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 on_commit: Callable[[int, str, float, int], None] | None = None,
+                 chaos_hook: Callable[[int], None] | None = None):
+        super().__init__(directory, keep)
+        self.on_commit = on_commit
+        self.chaos_hook = chaos_hook
+        self._cond = threading.Condition()
+        self._slot: tuple[dict[str, np.ndarray], int] | None = None
+        self._busy = False
+        self._closed = False
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(target=self._writer, daemon=True,
+                                        name=f"ckpt-writer:{directory}")
+        self._thread.start()
+
+    # -- training-thread side ------------------------------------------
+    def save(self, tree, step: int) -> None:
+        """Snapshot now, write in the background. Blocks only while a
+        previous write is still in flight (depth-1 backpressure)."""
+        flat = _flatten(tree)          # host snapshot; safe to mutate tree after
+        with self._cond:
+            self._raise_pending_locked()
+            while self._slot is not None or self._busy:
+                self._cond.wait(0.05)
+                self._raise_pending_locked()
+            if self._closed:
+                raise RuntimeError("AsyncCheckpointer is closed")
+            self._slot = (flat, step)
+            self._cond.notify_all()
+
+    def flush(self) -> None:
+        """Block until no write is pending or in flight; re-raise any
+        deferred writer error on the calling thread."""
+        with self._cond:
+            while self._slot is not None or self._busy:
+                self._cond.wait(0.05)
+            self._raise_pending_locked()
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Graceful shutdown: let the pending write (if any) commit, then
+        stop the writer. Never raises — call ``flush`` first when deferred
+        errors must surface."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join(timeout)
+
+    def _raise_pending_locked(self) -> None:
+        if self._error is not None:
+            raise self._error
+
+    # -- writer thread -------------------------------------------------
+    def _writer(self) -> None:
+        while True:
+            with self._cond:
+                while self._slot is None and not self._closed:
+                    self._cond.wait(0.05)
+                if self._slot is None:
+                    return             # closed and drained
+                flat, step = self._slot
+                self._slot = None
+                self._busy = True
+                self._cond.notify_all()
+            err: BaseException | None = None
+            try:
+                t0 = time.monotonic()
+                pre = (lambda: self.chaos_hook(step)) if self.chaos_hook else None
+                path = save_pytree(flat, self.directory, step, pre_commit=pre)
+                self._gc()
+                if self.on_commit is not None:
+                    self.on_commit(step, path, time.monotonic() - t0,
+                                   tree_nbytes(flat))
+            except BaseException as e:  # noqa: BLE001 - deferred to caller
+                err = e
+            with self._cond:
+                if err is not None:
+                    self._error = err
+                self._busy = False
+                self._cond.notify_all()

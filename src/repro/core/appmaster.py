@@ -417,7 +417,7 @@ class ApplicationMaster(ApplicationMasterProtocol):
         self._prev_degraded = world < self._target_world
 
         ctx = JobContext(world_size=world, workdir=self.workdir,
-                         chaos=self.chaos)
+                         chaos=self.chaos, events=self.events)
         ctx.shared["attempt"] = attempt
         ctx.shared["world_size"] = world
         ctx.shared["target_world"] = self._target_world

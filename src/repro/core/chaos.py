@@ -81,6 +81,13 @@ class FaultSpec:
     ``duration_s``. FAIL_ALLOCATION fires on allocate calls after skipping
     the first ``after_allocs``. ``count`` bounds total firings.
 
+    A KILL_TASK spec with ``in_ckpt_write=True`` fires from the *checkpoint
+    writer window* instead of the training loop: the async checkpointer
+    consults ``check_ckpt_write`` between staging the arrays and writing the
+    COMMIT marker, so ``at_step`` names the checkpoint step being written
+    and the kill lands mid-background-write — the resume contract must then
+    fall back to the previous committed step.
+
     SLOW_STEP makes a task a *straggler* rather than a corpse: every step in
     ``[at_step, until_step]`` (``until_step=None`` = to the end) is delayed
     by ``delay_s`` seconds. The delay applies to the whole window; ``count``
@@ -111,6 +118,7 @@ class FaultSpec:
     delay_s: float = 0.0
     src: str = ""                      # PARTITION endpoint patterns
     dst: str = ""
+    in_ckpt_write: bool = False        # KILL_TASK inside the ckpt writer window
 
     @staticmethod
     def _match(pattern: str, task_id: str) -> bool:
@@ -317,6 +325,8 @@ class FaultInjector:
         delay = 0.0
         with self._lock:
             for idx, spec in self._specs(FaultKind.KILL_TASK):
+                if spec.in_ckpt_write:   # fires from check_ckpt_write instead
+                    continue
                 if (spec.matches_task(task_id) and spec.matches_attempt(attempt)
                         and spec.at_step == step and self._eligible(idx, spec)):
                     self._fire(idx, spec, task=task_id, attempt=attempt,
@@ -368,6 +378,28 @@ class FaultInjector:
             # sleep OUTSIDE the lock: a straggler must not slow the other
             # tasks' chaos hooks, only itself
             self.sleep(delay)
+
+    def check_ckpt_write(self, task_id: str, attempt: int, step: int) -> None:
+        """Hook inside the async checkpoint writer, between staging and the
+        COMMIT marker. Raises for KILL_TASK specs with ``in_ckpt_write=True``
+        whose ``at_step`` matches the checkpoint step being written —
+        simulating a task killed mid-background-write, the exact window the
+        publish-after-commit rule protects."""
+        if not self.enabled:
+            return
+        with self._lock:
+            for idx, spec in self._specs(FaultKind.KILL_TASK):
+                if not spec.in_ckpt_write:
+                    continue
+                if (spec.matches_task(task_id) and spec.matches_attempt(attempt)
+                        and (spec.at_step is None or spec.at_step == step)
+                        and self._eligible(idx, spec)):
+                    self._fire(idx, spec, task=task_id, attempt=attempt,
+                               step=step, in_ckpt_write=True)
+                    raise ChaosKill(
+                        f"chaos: injected kill of {task_id} inside the "
+                        f"checkpoint write of step {step} at attempt={attempt} "
+                        f"(seed={self.plan.seed})")
 
 
 #: Shared no-op injector — the production default everywhere chaos threads

@@ -62,6 +62,14 @@ ELASTIC_EVENT_KINDS = frozenset({
     "partial_allocation", "gang_resized", "attempt_degraded", "gang_regrown",
 })
 
+#: Checkpoint event kinds (checkpoint/checkpointer.py via the train program):
+#:   ckpt_committed — a checkpoint's atomic rename landed (step, duration_s,
+#:                    bytes, async flag). Emitted only AFTER commit — by the
+#:                    background writer on the async path — so the event
+#:                    trail, like ``ctx.shared["ckpt_step"]``, never names a
+#:                    step a relaunch couldn't resume from.
+CHECKPOINT_EVENT_KINDS = frozenset({"ckpt_committed"})
+
 
 class EventLog:
     def __init__(self):
@@ -92,4 +100,5 @@ class EventLog:
                 if e.kind in FAILURE_EVENT_KINDS
                 or e.kind in RECOVERY_EVENT_KINDS
                 or e.kind in SPECULATION_EVENT_KINDS
-                or e.kind in ELASTIC_EVENT_KINDS]
+                or e.kind in ELASTIC_EVENT_KINDS
+                or e.kind in CHECKPOINT_EVENT_KINDS]

@@ -97,6 +97,13 @@ class JobContext:
     # program via ``report_progress``/``step`` and read by the executor's
     # heartbeat loop — the AM's straggler detection feeds off it
     progress: dict[str, int] = field(default_factory=dict)
+    # event log for ML-program-side telemetry (e.g. ckpt_committed); None in
+    # bare unit contexts
+    events: EventLog | None = None
+    # flush callbacks for in-flight async work (checkpoint writer,
+    # prefetcher): registered by the ML program, drained by graceful
+    # teardown paths so no committed-but-unpublished work is lost
+    _flushers: list[Callable[[], None]] = field(default_factory=list)
 
     def __post_init__(self):
         if self.barrier is None:
@@ -120,10 +127,29 @@ class JobContext:
 
     def shrink_world(self, n: int = 1) -> None:
         """Elastic resize mid-attempt: an INFRA-lost member above the floor
-        was shed, so future barriers expect one fewer participant."""
+        was shed, so future barriers expect one fewer participant. Pending
+        async work is flushed first — a resize must not strand a checkpoint
+        that already finished staging."""
+        self.flush_async()
         self.world_size = max(1, self.world_size - n)
         self.shared["world_size"] = self.world_size
         self.barrier.reduce(n)
+
+    def register_flusher(self, fn: Callable[[], None]) -> None:
+        """Register a flush hook for in-flight async work (async checkpoint
+        writer, prefetch loader). Graceful teardown paths call
+        ``flush_async`` so committed work is published before exit."""
+        self._flushers.append(fn)
+
+    def flush_async(self) -> None:
+        """Drain registered flushers. Never raises: a flusher's deferred
+        error belongs to the thread that owns it (the ML program re-raises
+        it from its own save/flush), not to teardown."""
+        for fn in list(self._flushers):
+            try:
+                fn()
+            except Exception:  # noqa: BLE001 - teardown must proceed
+                pass
 
     def report_progress(self, exec_id: str, step: int) -> None:
         self.progress[exec_id] = step
@@ -278,6 +304,11 @@ class TaskExecutor:
                     break
                 child_t.join(self.HEARTBEAT_INTERVAL_S)
 
+            # graceful teardown: let in-flight async work (checkpoint
+            # writer, prefetcher) finish committing before the exit is
+            # reported — an already-staged checkpoint must still publish
+            # its ckpt_step so the next attempt resumes from it
+            self.ctx.flush_async()
             self.exit_status = int(result.get("exit", 0))
             self.diagnostics = result.get("diag")
             self.metrics = dict(self.ctx.shared.get(f"metrics:{self.exec_id}", {}))

@@ -1,5 +1,6 @@
 from repro.data.pipeline import (  # noqa: F401
     FileTokenDataset,
+    PrefetchingLoader,
     SyntheticLMDataset,
     make_dataset,
 )

@@ -11,10 +11,19 @@ Batches are full *global* batches; sharding happens when the train step
 consumes them (jit in_shardings). ``state_dict``/``load_state_dict`` make the
 iterator checkpointable alongside the model, which the TonY fault-tolerance
 path exercises.
+
+``PrefetchingLoader`` wraps any source: a background thread builds up to
+``depth`` batches ahead via the stateless ``batch_at(step)``, so host-side
+batch construction overlaps the accelerator step instead of stalling it.
+Because production is keyed on step (never on ambient iterator state), a
+restore through the same ``state_dict`` contract is batch-for-batch
+identical to the synchronous loader.
 """
 from __future__ import annotations
 
 import os
+import threading
+from collections import deque
 
 import numpy as np
 
@@ -61,7 +70,10 @@ class SyntheticLMDataset(_Base):
         m_idx = rng.integers(0, len(self.motifs), size=(B,))
         mlen = self.motifs.shape[1]
         reps = T // mlen + 2
-        seqs = np.stack([np.tile(self.motifs[i], reps)[:T + 1] for i in m_idx])
+        # one tile of the whole motif bank + one gather, instead of a Python
+        # loop per sequence (identical output: row i of the tiled bank IS
+        # np.tile(motifs[i], reps))
+        seqs = np.tile(self.motifs, (1, reps))[:, :T + 1][m_idx]
         noise_mask = rng.random((B, T + 1)) < self.noise_prob
         noise = rng.integers(0, self.vocab_size, size=(B, T + 1))
         seqs = np.where(noise_mask, noise, seqs).astype(np.int32)
@@ -82,15 +94,121 @@ class FileTokenDataset(_Base):
     def batch_at(self, step: int) -> dict:
         n = len(self.tokens) - self.tokens_per_batch
         off = (step * self.tokens_per_batch) % max(n, 1)
-        chunk = np.asarray(self.tokens[off:off + self.tokens_per_batch])
+        # exactly one copy out of the memmap (the file is already int32);
+        # tokens/labels are views of that copy, never memmap-backed
+        chunk = np.array(self.tokens[off:off + self.tokens_per_batch],
+                         dtype=np.int32)
         chunk = chunk.reshape(self.batch_size, self.seq_len + 1)
-        return {"tokens": chunk[:, :-1].astype(np.int32),
-                "labels": chunk[:, 1:].astype(np.int32)}
+        return {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}
 
     @staticmethod
     def write_corpus(path: str, tokens: np.ndarray) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         np.asarray(tokens, dtype=np.int32).tofile(path)
+
+
+class PrefetchingLoader:
+    """Background-thread prefetch over any ``_Base`` dataset.
+
+    A producer thread builds batches via ``dataset.batch_at(step)`` up to
+    ``depth`` ahead of the consumer; ``next_batch`` then only pops a
+    ready-made batch. Checkpointing goes through the same
+    ``state_dict``/``load_state_dict`` contract — the state is the next step
+    to be *consumed*, so a save/restore round-trip yields exactly the batch
+    sequence the synchronous loader would have produced.
+    """
+
+    def __init__(self, dataset: _Base, depth: int = 2):
+        self.dataset = dataset
+        self.depth = max(1, int(depth))
+        self.batch_size = dataset.batch_size
+        self.seq_len = dataset.seq_len
+        self._cond = threading.Condition()
+        self._buf: deque[tuple[int, dict]] = deque()
+        self._next_produce = dataset.step
+        self._next_consume = dataset.step
+        self._gen = 0                  # bumped on seek: stale batches dropped
+        self._closed = False
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(target=self._producer, daemon=True,
+                                        name="prefetch-loader")
+        self._thread.start()
+
+    # -- consumer side -------------------------------------------------
+    @property
+    def step(self) -> int:
+        return self._next_consume
+
+    @step.setter
+    def step(self, value: int) -> None:
+        if value != self._next_consume:
+            self.load_state_dict({"step": int(value)})
+
+    def state_dict(self) -> dict:
+        return {"step": self._next_consume}
+
+    def load_state_dict(self, d: dict) -> None:
+        """Seek: drop everything prefetched and restart production at the
+        restored step — restores are batch-for-batch identical to sync."""
+        step = int(d["step"])
+        with self._cond:
+            self._gen += 1
+            self._buf.clear()
+            self._next_produce = step
+            self._next_consume = step
+            self._error = None
+            self.dataset.load_state_dict({"step": step})
+            self._cond.notify_all()
+
+    def next_batch(self) -> dict:
+        with self._cond:
+            while not self._buf:
+                if self._error is not None:
+                    raise self._error
+                if self._closed:
+                    raise RuntimeError("PrefetchingLoader is closed")
+                self._cond.wait(0.05)
+            step, batch = self._buf.popleft()
+            assert step == self._next_consume, "prefetch order violated"
+            self._next_consume = step + 1
+            self._cond.notify_all()
+            return batch
+
+    def batch_at(self, step: int) -> dict:
+        return self.dataset.batch_at(step)
+
+    def close(self, timeout: float = 5.0) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join(timeout)
+
+    # -- producer thread -----------------------------------------------
+    def _producer(self) -> None:
+        while True:
+            with self._cond:
+                while len(self._buf) >= self.depth and not self._closed:
+                    self._cond.wait(0.05)
+                if self._closed:
+                    return
+                gen, step = self._gen, self._next_produce
+            try:
+                batch = self.dataset.batch_at(step)
+                err = None
+            except BaseException as e:  # noqa: BLE001 - handed to consumer
+                batch, err = None, e
+            with self._cond:
+                if self._closed:
+                    return
+                if gen != self._gen:
+                    continue           # seeked while producing: drop it
+                if err is not None:
+                    self._error = err
+                    self._cond.notify_all()
+                    return
+                self._buf.append((step, batch))
+                self._next_produce = step + 1
+                self._cond.notify_all()
 
 
 def make_dataset(kind: str, batch_size: int, seq_len: int, vocab_size: int,

@@ -20,11 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import AsyncCheckpointer, Checkpointer, tree_nbytes
 from repro.configs.base import ModelConfig
 from repro.core.cluster_spec import spec_task_counts
 from repro.core.task_executor import JobContext
-from repro.data import make_dataset
+from repro.data import PrefetchingLoader, make_dataset
 from repro.distributed.steps import init_train_state, make_train_fn
 from repro.launch.mesh import make_mesh_compat, set_mesh
 from repro.optim import AdamWConfig
@@ -49,11 +49,21 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
                        data_kind: str = "synthetic",
                        data_path: str | None = None,
                        data_seed: int = 0,
+                       ckpt_async: bool = True,
+                       prefetch_depth: int = 2,
                        fail_at: tuple[int, int] | None = None,
                        on_step: Callable[[int, dict], None] | None = None):
     """Returns an MLProgram. ``fail_at=(attempt, step)`` injects a crash in
     the chief worker at that (attempt, step) — the fault-tolerance tests and
-    benchmarks use it to exercise the AM relaunch path."""
+    benchmarks use it to exercise the AM relaunch path.
+
+    Steady-state steps are stall-free by default: ``ckpt_async`` hands the
+    checkpoint write to a background writer (``AsyncCheckpointer``) that
+    publishes ``ctx.shared["ckpt_step"]`` only after commit, and
+    ``prefetch_depth`` > 0 overlaps host-side batch construction with the
+    accelerator step (``PrefetchingLoader``). Both degrade to the synchronous
+    path (``ckpt_async=False`` / ``prefetch_depth=0``) with byte-identical
+    training and resume behavior."""
 
     def program(env: dict[str, str], ctx: JobContext) -> int:
         task_type = env["TASK_TYPE"]
@@ -125,7 +135,31 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
             global_batch = max(data_ax, (scaled // data_ax) * data_ax)
         data = make_dataset(data_kind, global_batch, seq_len, cfg.vocab_size,
                             path=data_path, seed=data_seed)
-        ckpt = Checkpointer(ckpt_dir)
+        if prefetch_depth > 0:
+            data = PrefetchingLoader(data, depth=prefetch_depth)
+
+        def on_commit(ckpt_step: int, path: str, duration_s: float,
+                      nbytes: int) -> None:
+            # the resume contract's publish point: ONLY after the atomic
+            # rename landed (on the async path this runs on the writer
+            # thread), so the AM can never resume from an uncommitted step
+            ctx.shared["ckpt_step"] = ckpt_step
+            if ctx.events is not None:
+                ctx.events.emit(f"ckpt:{exec_id}", "ckpt_committed",
+                                step=ckpt_step, duration_s=duration_s,
+                                bytes=nbytes, attempt=attempt,
+                                is_async=ckpt_async)
+
+        if ckpt_async:
+            ckpt = AsyncCheckpointer(
+                ckpt_dir, on_commit=on_commit,
+                chaos_hook=lambda s: ctx.chaos.check_ckpt_write(
+                    exec_id, attempt, s))
+            # graceful teardown paths (executor exit, mid-attempt shed)
+            # drain the writer so committed work is never lost
+            ctx.register_flusher(ckpt.flush)
+        else:
+            ckpt = Checkpointer(ckpt_dir)
         with set_mesh(mesh):
             train_fn, _ = make_train_fn(
                 cfg, mesh, strategy, opt=AdamWConfig(lr=lr, weight_decay=0.0))
@@ -153,27 +187,44 @@ def make_train_program(cfg: ModelConfig, *, steps: int, batch_size: int,
                     {"attempt": attempt, "restored_step": start})
 
             losses = ctx.shared.setdefault("loss_history", [])
-            for step in range(start, steps):
-                if ctx.cancel.is_set():
-                    return 143
-                # records progress for straggler detection + runs the chaos
-                # hooks (which may delay or kill this step)
-                ctx.step(exec_id, attempt, step)
-                if fail_at is not None and (attempt, step) == fail_at:
-                    raise RuntimeError(
-                        f"injected transient failure at attempt={attempt} step={step}")
-                batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
-                state, metrics = train_fn(state, batch)
-                loss = float(metrics["loss"])
-                losses.append((step, loss))
-                if on_step:
-                    on_step(step, {k: float(v) for k, v in metrics.items()})
-                if (step + 1) % ckpt_every == 0 or step + 1 == steps:
-                    ckpt.save(jax.tree.map(np.asarray, state), step + 1)
-                    data.step = step + 1
-                    # tell the AM which checkpoint the next attempt may
-                    # resume from (its side of the resume_step contract)
-                    ctx.shared["ckpt_step"] = step + 1
+            try:
+                for step in range(start, steps):
+                    if ctx.cancel.is_set():
+                        return 143
+                    # records progress for straggler detection + runs the
+                    # chaos hooks (which may delay or kill this step)
+                    ctx.step(exec_id, attempt, step)
+                    if fail_at is not None and (attempt, step) == fail_at:
+                        raise RuntimeError(
+                            f"injected transient failure at attempt={attempt} step={step}")
+                    batch = {k: jnp.asarray(v)
+                             for k, v in data.next_batch().items()}
+                    state, metrics = train_fn(state, batch)
+                    loss = float(metrics["loss"])
+                    losses.append((step, loss))
+                    if on_step:
+                        on_step(step, {k: float(v) for k, v in metrics.items()})
+                    if (step + 1) % ckpt_every == 0 or step + 1 == steps:
+                        if ckpt_async:
+                            # snapshot + hand off; the writer publishes
+                            # ckpt_step after commit. A deferred writer error
+                            # (e.g. a chaos kill mid-write) re-raises here.
+                            ckpt.save(state, step + 1)
+                        else:
+                            t0 = time.monotonic()
+                            path = ckpt.save(
+                                jax.tree.map(np.asarray, state), step + 1)
+                            on_commit(step + 1, path, time.monotonic() - t0,
+                                      tree_nbytes(state))
+                if ckpt_async:
+                    # normal exit: surface any deferred writer error and make
+                    # sure the final checkpoint committed before succeeding
+                    ckpt.flush()
+            finally:
+                if ckpt_async:
+                    ckpt.close()
+                if prefetch_depth > 0:
+                    data.close()
             ctx.shared[f"metrics:{exec_id}"] = {
                 "peak_memory_mb": float(
                     sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))

@@ -71,6 +71,14 @@ def main() -> None:
     ap.add_argument("--strategy", default="fsdp_tp")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-async", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="write checkpoints from a background writer thread "
+                         "(publishes ckpt_step only after commit); "
+                         "--no-ckpt-async restores the blocking writer")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="batches the data pipeline builds ahead of the "
+                         "train step (0 = synchronous batch construction)")
     chaos = ap.add_argument_group(
         "chaos", "deterministic fault injection (core/chaos.py)")
     chaos.add_argument("--chaos-seed", type=int, default=1234,
@@ -79,6 +87,12 @@ def main() -> None:
                        help="kill the chief worker at this step (once)")
     chaos.add_argument("--chaos-oom-step", type=int, default=None,
                        help="OOM the chief worker at this step (once)")
+    chaos.add_argument("--chaos-kill-ckpt-write", type=int, default=None,
+                       metavar="STEP",
+                       help="kill the chief inside the async checkpoint "
+                            "writer while it writes this step (once) — the "
+                            "relaunch must resume from the previous "
+                            "committed step")
     chaos.add_argument("--chaos-random-faults", type=int, default=0,
                        help="generate N seeded random kill/OOM faults")
     chaos.add_argument("--blacklist-threshold", type=int, default=3,
@@ -129,6 +143,10 @@ def main() -> None:
     if args.chaos_oom_step is not None:
         plan = plan.add(FaultSpec(FaultKind.OOM, task="worker:0",
                                   at_step=args.chaos_oom_step))
+    if args.chaos_kill_ckpt_write is not None:
+        plan = plan.add(FaultSpec(FaultKind.KILL_TASK, task="worker:0",
+                                  at_step=args.chaos_kill_ckpt_write,
+                                  in_ckpt_write=True))
     if args.chaos_random_faults:
         plan = FaultPlan(plan.seed, plan.faults + FaultPlan.random_plan(
             args.chaos_seed, steps=args.steps,
@@ -166,6 +184,7 @@ def main() -> None:
     prog = make_train_program(
         cfg, steps=args.steps, batch_size=args.batch_size, seq_len=args.seq_len,
         ckpt_dir=os.path.join(ckpt_dir, "ckpt"), ckpt_every=args.ckpt_every,
+        ckpt_async=args.ckpt_async, prefetch_depth=args.prefetch_depth,
         strategy=args.strategy, lr=args.lr,
         on_step=lambda s, m: steps_log.append((s, m["loss"])))
 
@@ -188,6 +207,7 @@ def main() -> None:
         "stragglers": summary["stragglers"],
         "speculation": summary["speculation"],
         "chaos_injected": events.count("chaos_injected"),
+        "ckpt_committed": events.count("ckpt_committed"),
         "ckpt_dir": ckpt_dir,
     }, indent=2))
     if not result.succeeded:

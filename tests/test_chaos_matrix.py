@@ -272,6 +272,99 @@ def test_elastic_matrix_is_deterministic_for_fixed_seed():
     assert run_once() == run_once()
 
 
+# ----------------------------------------------------------------------
+# kill-during-async-checkpoint-write cell: the fault fires INSIDE the
+# background writer (between staging and COMMIT), not at a step boundary.
+# The publish-after-commit rule means the relaunch must resume from the
+# last *committed* step — never the one whose write was killed.
+
+def _async_ckpt_program(ckpt_dir, steps=6, ckpt_every=2):
+    import numpy as np
+
+    from repro.checkpoint import AsyncCheckpointer
+
+    def program(env, ctx):
+        task_id = f"{env['TASK_TYPE']}:{env['TASK_INDEX']}"
+        attempt = int(ctx.shared.get("attempt", 1))
+        if not ctx.rendezvous(timeout=10):
+            return 3
+        if task_id != "worker:0":
+            while not ctx.cancel.is_set() and not ctx.shared.get("done"):
+                time.sleep(0.002)
+            return 0
+        ckpt = AsyncCheckpointer(
+            ckpt_dir,
+            on_commit=lambda s, path, dur, nb: ctx.shared.__setitem__(
+                "ckpt_step", s),
+            chaos_hook=lambda s: ctx.chaos.check_ckpt_write(
+                task_id, attempt, s))
+        ctx.register_flusher(ckpt.flush)
+        start = int(ctx.shared.get("resume_step", 0))
+        state = {"w": np.full((4,), float(start), np.float32)}
+        try:
+            for step in range(start, steps):
+                if ctx.cancel.is_set():
+                    return 143
+                ctx.step(task_id, attempt, step)
+                state = {"w": state["w"] + 1.0}
+                time.sleep(0.005)
+                if (step + 1) % ckpt_every == 0:
+                    # a deferred writer kill re-raises here (or at flush)
+                    ckpt.save(state, step + 1)
+            ckpt.flush()
+        finally:
+            ckpt.close()
+            ctx.shared["done"] = True
+        return 0
+
+    return program
+
+
+def _run_async_ckpt_kill_cell(tmp_path):
+    from repro.checkpoint import latest_step
+
+    plan = FaultPlan(seed=CHAOS_SEED).add(
+        FaultSpec(FaultKind.KILL_TASK, task="worker:0", at_step=4,
+                  in_ckpt_write=True))
+    ev = EventLog()
+    rm = make_cluster(event_log=ev, chaos=FaultInjector(plan, events=ev))
+    job = _job()
+    app_id = rm.submit_application(job.name, job.queue)
+    ckpt_dir = str(tmp_path / "ckpt")
+    am = ApplicationMaster(
+        rm, app_id, job, _async_ckpt_program(ckpt_dir),
+        retry_policy=RetryPolicy(max_attempts=3).with_clock(lambda s: None))
+    box = {}
+    t = threading.Thread(target=lambda: box.update(result=am.run()),
+                         daemon=True)
+    t.start()
+    t.join(45)
+    assert not t.is_alive(), "async-ckpt kill cell hung"
+    return box["result"], ev, latest_step(ckpt_dir)
+
+
+def test_kill_during_async_ckpt_write_resumes_from_committed_step(tmp_path):
+    res, ev, last = _run_async_ckpt_kill_cell(tmp_path)
+    assert res.succeeded, res.diagnostics
+    assert len(res.attempts) == 2
+    # attempt 1 committed step 2, died inside the write of step 4 — so the
+    # relaunch resumed from 2 (the last COMMIT), never from 4
+    assert res.resumed_attempts == {2: 2}
+    assert ev.count("chaos_injected") == 1
+    assert ev.count("attempt_resumed") == 1
+    assert last == 6                     # attempt 2 re-ran 2..6 and finished
+    assert not res.attempts[-1].failed_tasks
+
+
+def test_kill_during_async_ckpt_write_is_deterministic(tmp_path):
+    def run_once(sub):
+        res, ev, last = _run_async_ckpt_kill_cell(tmp_path / sub)
+        return (res.final_status, len(res.attempts),
+                dict(res.resumed_attempts), ev.count("chaos_injected"), last)
+
+    assert run_once("a") == run_once("b")
+
+
 def test_matrix_is_deterministic_for_fixed_seed():
     """Same seed -> same trajectory: run one cell twice, compare outcomes."""
     def run_once():
